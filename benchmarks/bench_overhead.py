@@ -1,0 +1,84 @@
+"""VRGD systems cost (not a paper table; the deployment question the paper
+leaves implicit): step-time overhead of GSNR statistics + the fused-kernel
+win on the update math.
+
+  a) trainer overhead: base optimizer vs VR at equal k-microbatch structure
+     (isolates the Σg² accumulation + GSNR pipeline cost),
+  b) update-math microbench: jnp GSNR pipeline vs fused Pallas kernel
+     (interpret mode on CPU — structural check; wall-clock wins are TPU).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_smoke
+from repro.core import GradStats, gsnr_scale
+from repro.data import lm_batches
+from repro.train import init_state, make_loss_fn, make_train_step
+
+
+def timed(fn, *args, warmup=2, iters=8):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters, out
+
+
+def trainer_overhead(fast: bool) -> None:
+    cfg0 = get_smoke("granite-3-2b").replace(global_batch=16, seq_len=64)
+    stream = lm_batches(cfg0.model.vocab_size, 16, 64, seed=0)
+    batch = next(iter(stream))
+    times = {}
+    import dataclasses
+
+    for name in ("adam", "vr_adam"):
+        cfg = cfg0.replace(optimizer=dataclasses.replace(cfg0.optimizer, name=name, k=8))
+        state = init_state(cfg)
+        step_fn, _ = make_train_step(cfg, make_loss_fn(cfg))
+        jstep = jax.jit(step_fn)
+        dt, _ = timed(lambda s=state, b=batch, f=jstep: f(s, b), iters=4)
+        times[name] = dt
+        emit(f"overhead_step_{name}", dt * 1e6, f"k=8")
+    emit(
+        "overhead_vr_ratio",
+        0.0,
+        f"vr/base={times['vr_adam']/times['adam']:.3f}",
+    )
+
+
+def update_math(fast: bool) -> None:
+    n = 1 << 20 if not fast else 1 << 18
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (n,)) * 0.1
+    g2 = jnp.square(g) + jax.random.uniform(jax.random.fold_in(key, 1), (n,)) * 0.01
+    stats = GradStats(mean={"w": g}, sq_mean={"w": g2}, k=8)
+
+    @jax.jit
+    def jnp_path(stats):
+        r = gsnr_scale(stats, 0.1)
+        return jax.tree_util.tree_map(lambda r_, g_: r_ * g_, r, stats.mean)
+
+    dt_j, _ = timed(jnp_path, stats)
+    emit("update_math_jnp", dt_j * 1e6, f"n={n}")
+
+    from repro.kernels.vr_update import vr_scale
+
+    dt_k, _ = timed(lambda: vr_scale(g, g2, 0.1, 1e-12))
+    emit("update_math_pallas_interpret", dt_k * 1e6, f"n={n};note=CPU-interpret")
+
+
+def main(fast: bool = False) -> None:
+    t0 = time.time()
+    trainer_overhead(fast)
+    update_math(fast)
+    print(f"# bench_overhead done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Shared benchmark helpers: CSV emission, simple training drivers, AUC."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OptimizerConfig
+from repro.core import grad_only, grad_stats, make_optimizer
+
+_tm = jax.tree_util.tree_map
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The scaffold's contract: ``name,us_per_call,derived`` CSV."""
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def auc(labels: np.ndarray, scores: np.ndarray) -> float:
+    """Mann-Whitney rank AUC."""
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    # average ties
+    s_sorted = scores[order]
+    i = 0
+    while i < len(s_sorted):
+        j = i
+        while j + 1 < len(s_sorted) and s_sorted[j + 1] == s_sorted[i]:
+            j += 1
+        if j > i:
+            ranks[order[i : j + 1]] = ranks[order[i : j + 1]].mean()
+        i = j + 1
+    pos = labels > 0.5
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+
+
+def train_optimizer(
+    loss_fn: Callable,
+    params,
+    batches: Iterable,
+    opt_cfg: OptimizerConfig,
+    steps: int,
+    eval_fn: Optional[Callable] = None,
+    target: Optional[float] = None,
+) -> Dict:
+    """Generic driver: returns {final_params, losses, steps_to_target, s_per_step}."""
+    opt = make_optimizer(opt_cfg)
+    state = opt.init(params)
+    is_vr = opt_cfg.is_vr
+
+    @jax.jit
+    def step(params, state, batch):
+        if is_vr:
+            loss, _, stats = grad_stats(loss_fn, params, batch, opt_cfg.k)
+            g = stats.mean
+        else:
+            loss, _, g = grad_only(loss_fn, params, batch)
+            stats = None
+        upd, state = opt.update(g, state, params, stats=stats)
+        params = _tm(jnp.add, params, upd)
+        return params, state, loss
+
+    it = iter(batches)
+    losses = []
+    steps_to_target = None
+    t0 = time.time()
+    for i in range(steps):
+        params, state, loss = step(params, state, next(it))
+        l = float(loss)
+        losses.append(l)
+        if target is not None and steps_to_target is None and l <= target:
+            steps_to_target = i + 1
+    wall = time.time() - t0
+    out = {
+        "params": params,
+        "losses": losses,
+        "final_loss": losses[-1] if losses else float("nan"),
+        "steps_to_target": steps_to_target,
+        "s_per_step": wall / max(steps, 1),
+    }
+    if eval_fn is not None:
+        out["eval"] = eval_fn(params)
+    return out

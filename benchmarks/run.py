@@ -1,0 +1,59 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure:
+
+  bench_linreg       Fig. 5 (convergence) + Fig. 4 (gamma/k sensitivity)
+  bench_cifar_proxy  Table 6 / Fig. 3 (LB ablation across 4 optimizer pairs)
+  bench_bert_proxy   Table 1 (pretraining quality vs batch, LAMB vs VR-LAMB)
+  bench_gengap       Tables 2 & 4 (generalization gap)
+  bench_dlrm_proxy   Table 5 (CTR AUC vs batch, SGD vs VR-SGD)
+  bench_overhead     VRGD systems cost (step overhead + fused kernel)
+  bench_roofline     §Roofline terms from the dry-run artifacts
+
+``python -m benchmarks.run``            full pass (CPU, ~15 min)
+``python -m benchmarks.run --fast``     reduced sweeps (~4 min)
+``python -m benchmarks.run --only linreg,gengap``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "linreg",
+    "cifar_proxy",
+    "bert_proxy",
+    "gengap",
+    "dlrm_proxy",
+    "overhead",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for mod in MODULES:
+        if only and mod not in only:
+            continue
+        try:
+            m = __import__(f"benchmarks.bench_{mod}", fromlist=["main"])
+            m.main(fast=args.fast)
+        except Exception:  # noqa: BLE001 — keep the harness running
+            failures.append(mod)
+            print(f"# bench_{mod} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    print(f"# total {time.time()-t0:.1f}s; failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""The paper's core experiment shape, end to end on one machine:
+
+Train the same small LM at increasing global batch (sqrt-scaled LR, fixed
+token budget) with LAMB vs VR-LAMB and print final eval loss + measured
+generalization gap per point — a miniature of paper Tables 1/2.
+
+  PYTHONPATH=src python examples/large_batch_scaling.py
+"""
+import dataclasses
+
+from repro.configs import get_smoke
+from repro.core import sqrt_scaled_lr
+from repro.data import lm_batches
+from repro.train import eval_loss, make_loss_fn, train_loop
+
+cfg0 = get_smoke("internlm2-1.8b").replace(seq_len=32)
+cfg0 = cfg0.replace(model=dataclasses.replace(cfg0.model, vocab_size=128))
+VOCAB, SEQ = cfg0.model.vocab_size, cfg0.seq_len
+BASE_BATCH, BASE_LR, TOKEN_BUDGET = 32, 2.5e-3, 32 * 32 * 110
+
+test_batches = [next(iter(lm_batches(VOCAB, 64, SEQ, seed=0, stream_seed=999)))]
+
+print(f"{'batch':>6} {'opt':>8} {'steps':>6} {'train':>8} {'test':>8} {'gap':>8}")
+for batch in (32, 128, 512):
+    steps = max(10, TOKEN_BUDGET // (batch * SEQ))
+    for name in ("lamb", "vr_lamb"):
+        cfg = cfg0.replace(
+            global_batch=batch,
+            optimizer=dataclasses.replace(
+                cfg0.optimizer,
+                name=name,
+                lr=sqrt_scaled_lr(BASE_LR, batch, BASE_BATCH),
+                warmup_steps=max(2, steps // 10),
+                total_steps=steps,
+                k=min(16, max(4, batch // 16)),
+            ),
+        )
+        stream = lm_batches(VOCAB, batch, SEQ, seed=0, stream_seed=1)
+        state, hist = train_loop(cfg, stream, steps=steps)
+        loss_fn = make_loss_fn(cfg)
+        tr = hist[-1]["loss"] if hist else float("nan")
+        tr = eval_loss(cfg, loss_fn, state.params, [next(iter(lm_batches(VOCAB, 64, SEQ, seed=0, stream_seed=1)))])
+        te = eval_loss(cfg, loss_fn, state.params, test_batches)
+        print(f"{batch:>6} {name:>8} {steps:>6} {tr:8.4f} {te:8.4f} {te-tr:8.4f}")

@@ -1,0 +1,116 @@
+"""k-group gradient moment accumulation (paper's `k`, the "device number").
+
+The paper equates k with gradient-accumulation groups (Appendix Table 9:
+"Acc-steps in NVIDIA's code is equivalent to device number k"), and §7.3
+shows the optimum k is a statistical choice (~[32, 256]) independent of the
+physical device count.  This module computes GradStats by scanning k
+microbatches — sharding-agnostic: each microbatch gradient is itself a fully
+pjit-sharded computation, so this composes with FSDP/TP/EP unchanged.
+
+The device-wise variant (paper Alg. 1 literally) lives in core/distributed.py;
+both produce identical statistics for equal group sizes (tested).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gsnr import GradStats
+
+PyTree = Any
+_tm = jax.tree_util.tree_map
+
+
+def split_batch(batch: PyTree, k: int) -> PyTree:
+    """Reshape every leaf (B, ...) -> (k, B//k, ...)."""
+
+    def one(x):
+        b = x.shape[0]
+        if b % k:
+            raise ValueError(f"batch {b} not divisible by k={k}")
+        return x.reshape(k, b // k, *x.shape[1:])
+
+    return _tm(one, batch)
+
+
+def grad_stats(
+    loss_fn: Callable,
+    params: PyTree,
+    batch: PyTree,
+    k: int,
+    *,
+    has_aux: bool = False,
+    method: str = "scan",
+    squares: bool = True,
+) -> Tuple[jnp.ndarray, Any, GradStats]:
+    """Accumulate (mean loss, aux, GradStats) over k microbatches.
+
+    loss_fn(params, microbatch) -> loss  (or (loss, aux) when has_aux).
+
+    method="scan" (paper-faithful accumulation): sequential lax.scan; memory
+    cost is two f32 trees regardless of k, but under FSDP the per-microbatch
+    parameter all-gathers repeat k times (loop-multiplied collective traffic
+    — measured in EXPERIMENTS.md §Perf).
+
+    method="vmap" (beyond-paper): one vmapped backward over the k groups —
+    every layer's FSDP gather is shared across groups (k x fewer all-gather
+    bytes) at the cost of a transient (k, param)-shaped gradient stack.
+    Right choice for <= ~20B-param models; scan remains the default for
+    memory-critical giants.
+    """
+    mb = split_batch(batch, k)
+    if method == "vmap":
+        gfn = jax.value_and_grad(loss_fn, has_aux=has_aux)
+        outs, gs = jax.vmap(gfn, in_axes=(None, 0))(params, mb)
+        loss, aux = outs if has_aux else (outs, None)
+        gs = _tm(lambda x: x.astype(jnp.float32), gs)
+        stats = GradStats(
+            mean=_tm(lambda x: jnp.mean(x, axis=0), gs),
+            sq_mean=_tm(lambda x: jnp.mean(jnp.square(x), axis=0), gs),
+            k=k,
+        )
+        aux_out = _tm(lambda x: jnp.mean(x, axis=0), aux) if has_aux else None
+        return jnp.mean(loss), aux_out, stats
+    gfn = jax.value_and_grad(loss_fn, has_aux=has_aux)
+
+    def step(carry, microbatch):
+        loss_sum, aux_sum, g_sum = carry[:3]
+        out, g = gfn(params, microbatch)
+        loss, aux = out if has_aux else (out, aux_sum)
+        g = _tm(lambda x: x.astype(jnp.float32), g)
+        g_sum = _tm(jnp.add, g_sum, g)
+        new = (loss_sum + loss, _tm(jnp.add, aux_sum, aux) if has_aux else aux_sum, g_sum)
+        if squares:  # amortized-GSNR stale steps skip the Σg² tree entirely
+            new += (_tm(lambda a, x: a + jnp.square(x), carry[3], g),)
+        return new, None
+
+    zeros = _tm(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    aux0 = None
+    if has_aux:
+        # probe aux structure abstractly (zeros of the right shapes)
+        aux_shape = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params, _tm(lambda x: x[0], mb))
+        aux0 = _tm(lambda s: jnp.zeros(s.shape, s.dtype), aux_shape)
+    carry0 = (jnp.zeros((), jnp.float32), aux0, zeros)
+    if squares:
+        carry0 += (_tm(jnp.zeros_like, zeros),)
+    out_carry, _ = jax.lax.scan(step, carry0, mb)
+    loss_sum, aux_sum, g_sum = out_carry[:3]
+    g2_sum = out_carry[3] if squares else None
+    inv = 1.0 / k
+    stats = GradStats(
+        mean=_tm(lambda x: x * inv, g_sum),
+        sq_mean=_tm(lambda x: x * inv, g2_sum) if squares else None,
+        k=k,
+    )
+    aux_out = _tm(lambda x: x * inv, aux_sum) if has_aux else None
+    return loss_sum * inv, aux_out, stats
+
+
+def grad_only(loss_fn: Callable, params: PyTree, batch: PyTree, *, has_aux: bool = False):
+    """Plain single-pass gradient (baseline optimizers; no moment of squares)."""
+    gfn = jax.value_and_grad(loss_fn, has_aux=has_aux)
+    out, g = gfn(params, batch)
+    loss, aux = out if has_aux else (out, None)
+    return loss, aux, _tm(lambda x: x.astype(jnp.float32), g)

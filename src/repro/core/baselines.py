@@ -1,0 +1,148 @@
+"""Self-contained baseline optimizers: SGD, Momentum, Adam(W), LARS, LAMB.
+
+These are the paper's comparison points (paper Appendix D, Alg. 2/4/6) and
+the substrate the VR variants wrap.  Minimal optax-like interface:
+
+    Transform.init(params)                     -> state
+    Transform.update(grads, state, params, stats=None) -> (updates, state)
+
+updates are *deltas*: theta <- theta + updates.  ``stats`` (GradStats) is
+accepted and ignored by baselines so VR and base optimizers are drop-in
+interchangeable in the trainer.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gsnr import GradStats
+
+PyTree = Any
+
+
+class Transform(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]
+
+
+def _tm(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def _tensor_norm(x):
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr_fn: Callable) -> Transform:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None, stats: Optional[GradStats] = None):
+        lr = lr_fn(state["step"])
+        upd = _tm(lambda g: -lr * g, grads)
+        return upd, {"step": state["step"] + 1}
+
+    return Transform(init, update)
+
+
+def momentum(lr_fn: Callable, mu: float = 0.9) -> Transform:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "m": _tm(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None, stats=None):
+        lr = lr_fn(state["step"])
+        m = _tm(lambda m_, g: mu * m_ + g, state["m"], grads)
+        upd = _tm(lambda m_: -lr * m_, m)
+        return upd, {"step": state["step"] + 1, "m": m}
+
+    return Transform(init, update)
+
+
+def _adam_dir(grads, state, b1, b2, eps):
+    t = state["step"] + 1
+    m = _tm(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = _tm(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    direction = _tm(lambda m_, v_: (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), m, v)
+    return direction, m, v
+
+
+def adam(
+    lr_fn: Callable, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0
+) -> Transform:
+    def init(params):
+        z = _tm(jnp.zeros_like, params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None, stats=None):
+        lr = lr_fn(state["step"])
+        d, m, v = _adam_dir(grads, state, b1, b2, eps)
+        if wd and params is not None:
+            d = _tm(lambda d_, p: d_ + wd * p, d, params)
+        upd = _tm(lambda d_: -lr * d_, d)
+        return upd, {"step": state["step"] + 1, "m": m, "v": v}
+
+    return Transform(init, update)
+
+
+def lars(
+    lr_fn: Callable, mu: float = 0.9, wd: float = 1e-4, trust: float = 0.001
+) -> Transform:
+    """You et al. 2017 [arXiv:1708.03888]: layer-wise (per-tensor) trust ratio."""
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "m": _tm(jnp.zeros_like, params)}
+
+    def update(grads, state, params, stats=None):
+        lr = lr_fn(state["step"])
+
+        def one(g, m_, p):
+            g_ = g + wd * p
+            pn, gn = _tensor_norm(p), _tensor_norm(g_)
+            ratio = jnp.where((pn > 0) & (gn > 0), trust * pn / (gn + 1e-12), 1.0)
+            m_new = mu * m_ + ratio * g_
+            return m_new
+
+        m = _tm(one, grads, state["m"], params)
+        upd = _tm(lambda m_: -lr * m_, m)
+        return upd, {"step": state["step"] + 1, "m": m}
+
+    return Transform(init, update)
+
+
+def _lamb_phi(x):
+    return jnp.clip(x, 0.0, 10.0)
+
+
+def lamb(
+    lr_fn: Callable, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6, wd: float = 0.01
+) -> Transform:
+    """You et al. 2020 [arXiv:1904.00962] (paper Alg. 6)."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": _tm(jnp.zeros_like, params),
+            "v": _tm(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params, stats=None):
+        lr = lr_fn(state["step"])
+        d, m, v = _adam_dir(grads, state, b1, b2, eps)
+
+        def one(d_, p):
+            u = d_ + wd * p
+            pn, un = _tensor_norm(p), _tensor_norm(u)
+            ratio = jnp.where((pn > 0) & (un > 0), _lamb_phi(pn) / (un + 1e-12), 1.0)
+            return -lr * ratio * u
+
+        upd = _tm(one, d, params)
+        return upd, {"step": state["step"] + 1, "m": m, "v": v}
+
+    return Transform(init, update)

@@ -1,0 +1,77 @@
+"""GSNR: gradient signal-to-noise ratio (paper §3.1, §4.1).
+
+Pipeline (paper eq. 7 -> 2 -> 8 -> 9):
+
+    variance   sigma^2 = E_d[g_d^2] - (E_d[g_d])^2          (k groups)
+    gsnr       r       = g_mean^2 / sigma^2
+    normalize  r      <- r / mean_layer(r)    (per parameter tensor)
+    clip       r      <- clip(r, gamma, 1)
+
+All element-wise except the per-layer mean — which is why GSNR computes
+directly on FSDP-sharded (reduce-scattered) gradient shards on TPU: only the
+scalar layer mean needs a cross-shard reduction (DESIGN.md §3).
+
+``GradStats`` carries the two raw moments; everything downstream is pure.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GradStats(NamedTuple):
+    """Per-parameter first/second moments of the k group gradient means.
+
+    mean:    E_d[g_d]        — the usual (all-reduced) gradient
+    sq_mean: E_d[g_d ⊗ g_d]  — mean of element-wise squared group gradients
+    k:       number of groups (devices / microbatches)
+    """
+
+    mean: PyTree
+    sq_mean: PyTree
+    k: int
+
+
+def variance(stats: GradStats) -> PyTree:
+    """sigma^2 = E[g_d^2] - E[g_d]^2, clipped at 0 (paper eq. 7)."""
+    return jax.tree_util.tree_map(
+        lambda s, m: jnp.maximum(s - jnp.square(m), 0.0), stats.sq_mean, stats.mean
+    )
+
+
+def raw_gsnr(stats: GradStats, eps: float = 1e-12) -> PyTree:
+    """r = g^2 / sigma^2 (paper eq. 2 with the batch estimator of eq. 7)."""
+    var = variance(stats)
+    return jax.tree_util.tree_map(
+        lambda m, v: jnp.square(m) / (v + eps), stats.mean, var
+    )
+
+
+def normalize_per_layer(r: PyTree) -> PyTree:
+    """r / mean(r) per parameter tensor ("layer", paper eq. 8)."""
+    return jax.tree_util.tree_map(lambda x: x / jnp.maximum(jnp.mean(x), 1e-30), r)
+
+
+def clip_ratio(r: PyTree, gamma: float) -> PyTree:
+    """clip to [gamma, 1] (paper eq. 9); gamma=1 reduces VRGD to the base opt."""
+    return jax.tree_util.tree_map(lambda x: jnp.clip(x, gamma, 1.0), r)
+
+
+def gsnr_scale(stats: GradStats, gamma: float = 0.1, eps: float = 1e-12) -> PyTree:
+    """Full pipeline: the element-wise LR multiplier r(theta) in [gamma, 1]."""
+    return clip_ratio(normalize_per_layer(raw_gsnr(stats, eps)), gamma)
+
+
+def gsnr_summary(scale: PyTree, gamma: float = 0.1) -> dict:
+    """Scalar diagnostics for logging: mean/min/fraction clipped at the floor."""
+    leaves = [x.reshape(-1) for x in jax.tree_util.tree_leaves(scale)]
+    flat = jnp.concatenate(leaves) if leaves else jnp.zeros((1,))
+    return {
+        "gsnr/mean": jnp.mean(flat),
+        "gsnr/min": jnp.min(flat),
+        "gsnr/frac_floor": jnp.mean((flat <= gamma * (1 + 1e-5)).astype(jnp.float32)),
+    }

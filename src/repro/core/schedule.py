@@ -1,0 +1,40 @@
+"""LR schedules used by the paper: linear warm-up + {cosine, polynomial,
+linear, constant} decay, plus the square-root batch-size scaling rule the
+paper adopts ("we mainly adopt the square root rules to scale LRs", §6)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def sqrt_scaled_lr(base_lr: float, batch_size: int, base_batch: int) -> float:
+    """Square-root scaling rule (paper §6 / Table 12 LR columns)."""
+    return base_lr * math.sqrt(batch_size / base_batch)
+
+
+def linear_scaled_lr(base_lr: float, batch_size: int, base_batch: int) -> float:
+    return base_lr * batch_size / base_batch
+
+
+def make_schedule(cfg: OptimizerConfig) -> Callable:
+    peak, warm, total = cfg.lr, max(cfg.warmup_steps, 1), max(cfg.total_steps, 2)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = peak * (step + 1) / warm
+        t = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "poly":
+            decay = peak * jnp.power(1.0 - t, 2.0)
+        elif cfg.schedule == "linear":
+            decay = peak * (1.0 - t)
+        else:  # constant
+            decay = jnp.full_like(t, peak)
+        return jnp.where(step < warm, warm_lr, decay)
+
+    return fn

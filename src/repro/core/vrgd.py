@@ -1,0 +1,243 @@
+"""VRGD optimizers (the paper's contribution, §4 + Appendix D).
+
+Each VR optimizer consumes ``GradStats`` (the k-group gradient moments) and
+element-wise rescales the gradient by the normalized+clipped GSNR
+``r ∈ [gamma, 1]`` before (or, for VR-SGD, inside) the base update:
+
+  VR-SGD      theta <- theta - lr * r * g                      (Alg. 1)
+  VR-Momentum r*g into heavy-ball momentum                     (§4.2)
+  VR-Adam     p_t = b3*p + (1-b3)*r ; ghat = p̂_t * g ; Adam(ghat)  (Alg. 3)
+  VR-LARS     r*g into LARS                                    (§4.2)
+  VR-LAMB     VR-Adam direction + LAMB layer-wise trust ratio  (Alg. 5)
+
+The GSNR momentum ``p_t`` (decay b3=0.9) exists so a noisy per-step GSNR
+estimate doesn't whipsaw the effective LR (paper §4.2).  Note the paper
+applies r to the *gradient entering the moment estimates*, not to the final
+update — otherwise m/v would be biased for the next step (paper's remark in
+§4.2); we follow that exactly.
+
+``gamma=1.0`` collapses r to exactly 1 (clip floor == ceiling), so every VR
+optimizer reduces to its base optimizer — a property test locks this in.
+
+When ``use_pallas`` is set, the fused element-wise pipeline runs through the
+Pallas TPU kernels in kernels/ (vr_update / vr_adam); the jnp path here is
+their oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as B
+from repro.core.gsnr import GradStats, gsnr_scale
+
+PyTree = Any
+_tm = jax.tree_util.tree_map
+
+
+def _require(stats: Optional[GradStats]) -> GradStats:
+    if stats is None:
+        raise ValueError("VR optimizers require GradStats (mean + sq_mean); see core/accumulate.py")
+    return stats
+
+
+def _scaled_grads(grads, stats, gamma, eps, use_pallas=False):
+    stats = _require(stats)
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.vr_scale_tree(stats, gamma, eps)
+    r = gsnr_scale(stats, gamma, eps)
+    return _tm(lambda r_, g: r_ * g, r, grads), r
+
+
+def vr_sgd(lr_fn: Callable, gamma: float = 0.1, eps: float = 1e-12, use_pallas: bool = False) -> B.Transform:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None, stats=None):
+        lr = lr_fn(state["step"])
+        sg, _r = _scaled_grads(grads, stats, gamma, eps, use_pallas)
+        upd = _tm(lambda g: -lr * g, sg)
+        return upd, {"step": state["step"] + 1}
+
+    return B.Transform(init, update)
+
+
+def vr_momentum(
+    lr_fn: Callable, mu: float = 0.9, gamma: float = 0.1, eps: float = 1e-12, use_pallas: bool = False
+) -> B.Transform:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32), "m": _tm(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None, stats=None):
+        lr = lr_fn(state["step"])
+        sg, _r = _scaled_grads(grads, stats, gamma, eps, use_pallas)
+        m = _tm(lambda m_, g: mu * m_ + g, state["m"], sg)
+        upd = _tm(lambda m_: -lr * m_, m)
+        return upd, {"step": state["step"] + 1, "m": m}
+
+    return B.Transform(init, update)
+
+
+def _vr_adam_dir(grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype="float32"):
+    """Shared VR-Adam machinery (Alg. 3 lines 8-17). Returns (dir, new_state).
+
+    Moments are *stored* in state_dtype (bf16 halves optimizer HBM for the
+    §Perf memory hillclimb) but all math runs in f32.
+
+    AMORTIZED GSNR (beyond-paper, EXPERIMENTS §Perf): when ``stats is None``
+    the GSNR momentum p_t is left untouched and the *stale* p̂ rescales the
+    fresh gradient — sound because the paper itself smooths GSNR with
+    b3=0.9 momentum (a half-life of ~6.6 steps), so a refresh period R << 7
+    changes p̂ negligibly while skipping the Σg² pass entirely on (R-1)/R
+    steps.  ``pt`` counts p updates for its bias correction.
+    """
+    t = state["step"] + 1
+    tf = t.astype(jnp.float32)
+    f32 = lambda tree: _tm(lambda x: x.astype(jnp.float32), tree)
+    sd = jnp.dtype(state_dtype)
+    store = lambda tree: _tm(lambda x: x.astype(sd), tree)
+    pt = state.get("pt", state["step"])
+    if stats is not None:
+        r = gsnr_scale(stats, gamma, gsnr_eps)
+        p = _tm(lambda p_, r_: b3 * p_ + (1 - b3) * r_, f32(state["p"]), r)
+        pt = pt + 1
+    else:  # stale GSNR step
+        p = f32(state["p"])
+    ptf = jnp.maximum(pt.astype(jnp.float32), 1.0)
+    phat = _tm(lambda p_: p_ / (1 - b3**ptf), p)
+    ghat = _tm(lambda ph, g: ph * g, phat, grads)
+    m = _tm(lambda m_, g: b1 * m_ + (1 - b1) * g, f32(state["m"]), ghat)
+    v = _tm(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), f32(state["v"]), ghat)
+    direction = _tm(
+        lambda m_, v_: (m_ / (1 - b1**tf)) / (jnp.sqrt(v_ / (1 - b2**tf)) + eps), m, v
+    )
+    return direction, {"step": t, "m": store(m), "v": store(v), "p": store(p), "pt": pt}
+
+
+def vr_adam(
+    lr_fn: Callable,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    b3: float = 0.9,
+    eps: float = 1e-8,
+    wd: float = 0.0,
+    gamma: float = 0.1,
+    gsnr_eps: float = 1e-12,
+    use_pallas: bool = False,
+    state_dtype: str = "float32",
+) -> B.Transform:
+    def init(params):
+        sd = jnp.dtype(state_dtype)
+        z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
+        return {"step": jnp.zeros((), jnp.int32), "pt": jnp.zeros((), jnp.int32),
+                "m": z(), "v": z(), "p": z()}
+
+    def update(grads, state, params=None, stats=None):
+        lr = lr_fn(state["step"])
+        if use_pallas and stats is not None:
+            from repro.kernels import ops as kops
+
+            return kops.vr_adam_update(
+                grads, state, _require(stats), lr, b1, b2, b3, eps, wd, gamma, gsnr_eps, params
+            )
+        d, new_state = _vr_adam_dir(
+            grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
+        )
+        if wd and params is not None:
+            d = _tm(lambda d_, p_: d_ + wd * p_, d, params)
+        upd = _tm(lambda d_: -lr * d_, d)
+        return upd, new_state
+
+    return B.Transform(init, update)
+
+
+def vr_lars(
+    lr_fn: Callable,
+    mu: float = 0.9,
+    wd: float = 1e-4,
+    trust: float = 0.001,
+    gamma: float = 0.1,
+    eps: float = 1e-12,
+    use_pallas: bool = False,
+) -> B.Transform:
+    base = B.lars(lr_fn, mu=mu, wd=wd, trust=trust)
+
+    def update(grads, state, params, stats=None):
+        sg, _r = _scaled_grads(grads, stats, gamma, eps, use_pallas)
+        return base.update(sg, state, params)
+
+    return B.Transform(base.init, update)
+
+
+def vr_lamb(
+    lr_fn: Callable,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    b3: float = 0.9,
+    eps: float = 1e-6,
+    wd: float = 0.01,
+    gamma: float = 0.1,
+    gsnr_eps: float = 1e-12,
+    use_pallas: bool = False,
+    state_dtype: str = "float32",
+) -> B.Transform:
+    def init(params):
+        sd = jnp.dtype(state_dtype)
+        z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
+        return {"step": jnp.zeros((), jnp.int32), "pt": jnp.zeros((), jnp.int32),
+                "m": z(), "v": z(), "p": z()}
+
+    def update(grads, state, params, stats=None):
+        lr = lr_fn(state["step"])
+        d, new_state = _vr_adam_dir(
+            grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
+        )
+
+        def one(d_, p_):
+            u = d_ + wd * p_
+            pn, un = B._tensor_norm(p_), B._tensor_norm(u)
+            ratio = jnp.where((pn > 0) & (un > 0), B._lamb_phi(pn) / (un + 1e-12), 1.0)
+            return -lr * ratio * u
+
+        upd = _tm(one, d, params)
+        return upd, new_state
+
+    return B.Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg, use_pallas: bool = False) -> B.Transform:
+    """OptimizerConfig -> Transform (base or VR per cfg.name)."""
+    from repro.core.schedule import make_schedule
+
+    lr_fn = make_schedule(cfg)
+    g, ge = cfg.gamma, cfg.gsnr_eps
+    table = {
+        "sgd": lambda: B.sgd(lr_fn),
+        "momentum": lambda: B.momentum(lr_fn, cfg.momentum),
+        "adam": lambda: B.adam(lr_fn, cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay),
+        "lars": lambda: B.lars(lr_fn, cfg.momentum, cfg.weight_decay),
+        "lamb": lambda: B.lamb(lr_fn, cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay),
+        "vr_sgd": lambda: vr_sgd(lr_fn, g, ge, use_pallas),
+        "vr_momentum": lambda: vr_momentum(lr_fn, cfg.momentum, g, ge, use_pallas),
+        "vr_adam": lambda: vr_adam(
+            lr_fn, cfg.b1, cfg.b2, cfg.b3, cfg.eps, cfg.weight_decay, g, ge, use_pallas,
+            cfg.state_dtype,
+        ),
+        "vr_lars": lambda: vr_lars(lr_fn, cfg.momentum, cfg.weight_decay, gamma=g, eps=ge),
+        "vr_lamb": lambda: vr_lamb(
+            lr_fn, cfg.b1, cfg.b2, cfg.b3, cfg.eps, cfg.weight_decay, g, ge, use_pallas,
+            cfg.state_dtype,
+        ),
+    }
+    if cfg.name not in table:
+        raise KeyError(f"unknown optimizer {cfg.name!r}")
+    return table[cfg.name]()

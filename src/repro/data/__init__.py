@@ -1,0 +1,10 @@
+from repro.data.pipeline import device_stream, host_slice, prefetch, shard_batch  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    CTRModel,
+    MarkovLM,
+    classification_batches,
+    classification_data,
+    ctr_batches,
+    linreg_data,
+    lm_batches,
+)

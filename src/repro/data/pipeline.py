@@ -1,0 +1,82 @@
+"""Host data pipeline: shard-aware placement + prefetch.
+
+Single-host in this container, but written multi-host style: each process
+slices its host batch by process_index, and arrays are placed with the mesh
+batch sharding so pjit consumes them without resharding.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import Rules
+
+
+def host_slice(batch: Dict, process_index: Optional[int] = None, process_count: Optional[int] = None):
+    pi = process_index if process_index is not None else jax.process_index()
+    pc = process_count if process_count is not None else jax.process_count()
+    if pc == 1:
+        return batch
+
+    def one(x):
+        per = x.shape[0] // pc
+        return x[pi * per : (pi + 1) * per]
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def shard_batch(batch: Dict, mesh: Mesh, rules: Optional[Rules] = None) -> Dict:
+    rules = rules or Rules(mesh=mesh)
+
+    def one(x):
+        axes = rules.batch_axes(x.shape[0])
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def prefetch(it: Iterator, size: int = 2) -> Iterator:
+    """Background-thread prefetch of host batches."""
+    q: collections.deque = collections.deque()
+    lock = threading.Condition()
+    done = {"v": False}
+
+    def worker():
+        for item in it:
+            with lock:
+                while len(q) >= size:
+                    lock.wait()
+                q.append(item)
+                lock.notify_all()
+        with lock:
+            done["v"] = True
+            lock.notify_all()
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        with lock:
+            while not q and not done["v"]:
+                lock.wait()
+            if not q and done["v"]:
+                return
+            item = q.popleft()
+            lock.notify_all()
+        yield item
+
+
+def device_stream(it: Iterator, mesh: Optional[Mesh] = None, prefetch_size: int = 2):
+    base = prefetch(it, prefetch_size)
+    for batch in base:
+        batch = host_slice(batch)
+        if mesh is not None:
+            batch = shard_batch(batch, mesh)
+        else:
+            batch = jax.tree_util.tree_map(jax.numpy.asarray, batch)
+        yield batch

@@ -1,0 +1,5 @@
+# Pallas TPU kernels (interpret-mode validated on CPU):
+#   vr_update.vr_scale        — fused GSNR pipeline (VR-SGD/Momentum/LARS)
+#   vr_adam.vr_adam_inner     — fused VR-Adam/LAMB inner step
+#   flash_attention           — causal/sliding-window online-softmax attention
+# ops.py holds the jit'd dispatch wrappers; ref.py the pure-jnp oracles.

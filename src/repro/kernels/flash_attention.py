@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: causal / sliding-window flash attention (GQA-aware).
+
+Grid (B, H, nq, nk) with the kv dim innermost: the output block for
+(b, h, iq) is revisited across ik while running max / denominator /
+accumulator live in VMEM scratch — the classic online-softmax pipeline,
+MXU-fed by (BLOCK_Q x D) @ (D x BLOCK_K) tiles.
+
+GQA: the kv-head index is h // (H // KV) inside the BlockSpec index maps, so
+grouped queries stream the same k/v tiles without materializing the repeat.
+
+Positions are implicit (training layout): q_pos = arange(S), k_pos =
+arange(Skv).  ref.attention_ref is the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, causal: bool, window: int, block_q: int, block_k: int, scale: float,
+    seq_kv: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (BQ, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (BK, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    # zero out-of-bounds kv rows of partial blocks (interpret mode pads with
+    # NaN; 0 * NaN would poison the p @ v accumulation)
+    kv_valid = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0) < seq_kv
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+    s = jax.lax.dot_general(
+        q * scale, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (BQ, BK)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_kv  # partial-block bounds
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q: (B,S,H,D); k,v: (B,Skv,KV,D) -> (B,S,H,D)."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_k)
+    scale = d**-0.5
+
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, scale=scale, seq_kv=skv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

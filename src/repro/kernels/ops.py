@@ -1,0 +1,77 @@
+"""Jit'd wrappers integrating the Pallas kernels into the optimizer/model
+stacks, with backend dispatch: real Mosaic lowering on TPU, interpret mode
+elsewhere (so CPU tests execute the same kernel bodies)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gsnr import GradStats
+from repro.kernels import flash_attention as fa
+from repro.kernels import vr_adam as va
+from repro.kernels import vr_update as vu
+
+_tm = jax.tree_util.tree_map
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def vr_scale_tree(stats: GradStats, gamma: float, eps: float) -> Tuple[Any, Any]:
+    """Fused (scaled_grads, r) across a pytree (kernel per leaf)."""
+    interp = _interpret()
+    pairs = _tm(lambda g, g2: vu.vr_scale(g, g2, gamma, eps, interpret=interp),
+                stats.mean, stats.sq_mean)
+    sg = jax.tree_util.tree_map(
+        lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+    )
+    r = jax.tree_util.tree_map(
+        lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+    )
+    return sg, r
+
+
+def vr_adam_update(
+    grads, state, stats: GradStats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps, params
+):
+    """Full VR-Adam update via the fused kernel; matches vrgd.vr_adam jnp path."""
+    interp = _interpret()
+    t = state["step"] + 1
+    tf = t.astype(jnp.float32)
+    bc1, bc2, bc3 = 1 - b1**tf, 1 - b2**tf, 1 - b3**tf
+
+    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+    leaves_g2 = treedef.flatten_up_to(stats.sq_mean)
+    leaves_m = treedef.flatten_up_to(state["m"])
+    leaves_v = treedef.flatten_up_to(state["v"])
+    leaves_p = treedef.flatten_up_to(state["p"])
+    dirs, ms, vs, ps = [], [], [], []
+    for g, g2, m, v, p in zip(leaves_g, leaves_g2, leaves_m, leaves_v, leaves_p):
+        d_, m_, v_, p_ = va.vr_adam_inner(
+            g, g2, m, v, p, bc1, bc2, bc3,
+            b1=b1, b2=b2, b3=b3, eps=eps, gamma=gamma, gsnr_eps=gsnr_eps,
+            interpret=interp,
+        )
+        dirs.append(d_)
+        ms.append(m_)
+        vs.append(v_)
+        ps.append(p_)
+    unf = treedef.unflatten
+    d = unf(dirs)
+    if wd and params is not None:
+        d = _tm(lambda d_, p_: d_ + wd * p_, d, params)
+    upd = _tm(lambda d_: -lr * d_, d)
+    new_state = {"step": t, "m": unf(ms), "v": unf(vs), "p": unf(ps),
+                 "pt": state.get("pt", state["step"]) + 1}
+    return upd, new_state
+
+
+def flash_attention(qh, k, v, q_pos=None, k_pos=None, *, causal: bool = True, window: int = 0):
+    """Adapter for models/attention.py: qh (B,S,KV,G,D) -> (B,S,KV,G,D)."""
+    b, s, kvh, g, d = qh.shape
+    q = qh.reshape(b, s, kvh * g, d)
+    out = fa.flash_attention(q, k, v, causal=causal, window=window, interpret=_interpret())
+    return out.reshape(b, s, kvh, g, d)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vr_scale_ref(g: jnp.ndarray, g2: jnp.ndarray, gamma: float, eps: float):
+    """GSNR pipeline on one tensor: returns (scaled_grad, r_clipped).
+
+    var -> r -> normalize by mean(r) -> clip [gamma, 1] -> r * g.
+    """
+    g = g.astype(jnp.float32)
+    var = jnp.maximum(g2.astype(jnp.float32) - jnp.square(g), 0.0)
+    r = jnp.square(g) / (var + eps)
+    r = r / jnp.maximum(jnp.mean(r), 1e-30)
+    r = jnp.clip(r, gamma, 1.0)
+    return r * g, r
+
+
+def vr_adam_inner_ref(
+    g, g2, m, v, p, *, b1, b2, b3, eps, gamma, gsnr_eps, bc1, bc2, bc3
+):
+    """Fused VR-Adam inner step on one tensor (paper Alg. 3 lines 8-17).
+
+    Returns (direction, m', v', p').  bcN = 1 - betaN**t.
+    """
+    _, r = vr_scale_ref(g, g2, gamma, gsnr_eps)
+    p_new = b3 * p + (1 - b3) * r
+    ghat = (p_new / bc3) * g
+    m_new = b1 * m + (1 - b1) * ghat
+    v_new = b2 * v + (1 - b2) * jnp.square(ghat)
+    direction = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    return direction, m_new, v_new, p_new
+
+
+def attention_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
+    """Naive attention oracle. q: (B,Sq,H,D); k,v: (B,Skv,KV,D); GQA by h//g.
+
+    Positions are implicit: q_pos = q_offset + arange(Sq), k_pos = arange(Skv).
+    """
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qh = q.reshape(b, sq, kvh, g, d)
+    scale = d**-0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,288 @@
+"""Loop-aware analysis of compiled (post-SPMD-partitioning) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but our layer stacks / microbatch accumulation / chunked attention are all
+``lax.scan`` loops — so raw cost_analysis under-reports FLOPs, bytes, and
+collective traffic by the trip counts (verified empirically; see DESIGN.md).
+This parser walks the HLO call graph, multiplies loop bodies by their trip
+counts (extracted from the loop-condition comparison constant), and reports:
+
+  flops            MXU flops: 2 * prod(out) * prod(contracted) per dot/conv
+  traffic_bytes    Σ (output + operand bytes) per top-level op — an HBM
+                   traffic estimate treating each fusion as atomic
+  collectives      per-kind {count, bytes} with bytes = output bytes
+                   (all-reduce/all-gather/reduce-scatter/all-to-all/
+                   collective-permute), loop-multiplied
+
+All numbers are PER DEVICE (the compiled module is the per-device SPMD
+program).  ``cost_analysis`` raw values are reported alongside in the
+dry-run JSON so both views are visible.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)(?:\.clone)? \(.*\)? -> .* \{$")
+_OP_RE = re.compile(r"^\s*(?:ROOT )?%([\w.\-]+) = (.*)$")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+CONTROL_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+class Op:
+    __slots__ = ("name", "type_str", "opname", "operands", "attrs", "raw")
+
+    def __init__(self, name, type_str, opname, operands, attrs, raw=""):
+        self.name = name
+        self.type_str = type_str
+        self.opname = opname
+        self.operands = operands
+        self.attrs = attrs
+        self.raw = raw
+
+
+def parse_module(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip()) if line.rstrip().endswith("{") else None
+            if m and ("->" in line):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # split "<type> <opname>(<operands>), <attrs>"
+        if rest.startswith("("):  # tuple type: find matching paren
+            depth = 0
+            for i, ch in enumerate(rest):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            type_str, tail = rest[: i + 1], rest[i + 2 :]
+        else:
+            sp = rest.find(" ")
+            type_str, tail = rest[:sp], rest[sp + 1 :]
+        pm = re.match(r"([\w\-]+)\((.*?)\)(.*)$", tail, re.S)
+        if not pm:
+            continue
+        opname, operand_str, attrs = pm.group(1), pm.group(2), pm.group(3)
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        comps[cur].append(Op(name, type_str, opname, operands, attrs, raw=tail))
+    return comps
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Trip count from the loop condition's ROOT comparison (lax.scan: i < N).
+
+    The root of the condition computation is `compare(counter, N)` (possibly
+    wrapped in a fusion); N is the constant operand of that comparison.
+    Taking the max constant anywhere in the condition (the naive approach)
+    over-multiplies when index-clamp constants (e.g. seq_len bounds) appear.
+    """
+    ops = comps.get(cond_name, [])
+    if not ops:
+        return 1
+    by_name = {op.name: op for op in ops}
+    root = ops[-1]
+
+    def const_val(op) -> Optional[int]:
+        if op is None or op.opname != "constant":
+            return None
+        m = re.search(r"constant\((-?\d+)\)", op.raw)
+        return int(m.group(1)) if m else None
+
+    def from_compare(op, env) -> Optional[int]:
+        vals = [const_val(env.get(o)) for o in op.operands]
+        vals = [v for v in vals if v is not None]
+        return max(vals) if vals else None
+
+    if root.opname == "compare":
+        v = from_compare(root, by_name)
+        return max(v, 1) if v else 1
+    if root.opname == "fusion":
+        fm = re.search(r"calls=%([\w.\-]+)", root.attrs)
+        callee = comps.get(fm.group(1), []) if fm else []
+        # map fusion params -> outer operands so the constant resolves
+        outer = [by_name.get(o) for o in root.operands]
+        env = {}
+        pidx = 0
+        for cop in callee:
+            if cop.opname == "parameter":
+                if pidx < len(outer) and outer[pidx] is not None:
+                    env[cop.name] = outer[pidx]
+                pidx += 1
+            else:
+                env[cop.name] = cop
+        for cop in callee:
+            if cop.opname == "compare":
+                v = from_compare(cop, env)
+                if v:
+                    return max(v, 1)
+    # fallback: max constant in the condition (old heuristic)
+    best = 1
+    for op in ops:
+        v = const_val(op)
+        if v:
+            best = max(best, v)
+    return best
+
+
+def _dot_flops(comps, comp: str, op: Op, shapes: Dict[str, str]) -> float:
+    _, out_dims = _shape_dims(op.type_str)
+    out = math.prod(out_dims) if out_dims else 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    contract = 1
+    if cm and op.operands:
+        lhs_type = shapes.get(op.operands[0], "")
+        _, lhs_dims = _shape_dims(lhs_type)
+        if cm.group(1):
+            for d in cm.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_dims):
+                    contract *= lhs_dims[di]
+    return 2.0 * out * contract
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    _, out_dims = _shape_dims(op.type_str)
+    out = math.prod(out_dims) if out_dims else 1
+    if len(op.operands) >= 2:
+        _, k_dims = _shape_dims(shapes.get(op.operands[1], ""))
+        k = math.prod(k_dims[:-1]) if k_dims else 1  # kernel spatial * in-ch
+        return 2.0 * out * k
+    return 0.0
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY %?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: computation named like main
+        entry = next((c for c in comps if "main" in c), next(iter(comps), None))
+
+    memo: Dict[str, Dict] = {}
+
+    def cost(comp: str) -> Dict:
+        if comp in memo:
+            return memo[comp]
+        # break cycles defensively
+        memo[comp] = {"flops": 0.0, "traffic": 0.0, "coll": {}, "coll_count": {}}
+        flops = 0.0
+        traffic = 0.0
+        coll: Dict[str, float] = {}
+        coll_count: Dict[str, int] = {}
+        shapes = {op.name: op.type_str for op in comps.get(comp, [])}
+        for op in comps.get(comp, []):
+            out_bytes = _shape_bytes(op.type_str)
+            if op.opname == "dynamic-slice":
+                # reads only the slice (count output once, not the source)
+                traffic += 2 * out_bytes
+            elif op.opname == "dynamic-update-slice":
+                # in-place region write: read update + write region, not the
+                # whole (aliased) buffer — critical for loop-carried KV caches
+                upd_bytes = _shape_bytes(shapes.get(op.operands[1], "")) if len(op.operands) > 1 else 0
+                traffic += 2 * upd_bytes
+            elif op.opname not in CONTROL_OPS:
+                traffic += out_bytes
+                for o in op.operands:
+                    traffic += _shape_bytes(shapes.get(o, ""))
+            if op.opname == "dot":
+                flops += _dot_flops(comps, comp, op, shapes)
+            elif op.opname == "convolution":
+                flops += _conv_flops(op, shapes)
+            elif op.opname == "while":
+                bm = re.search(r"body=%([\w.\-]+)", op.attrs)
+                cm_ = re.search(r"condition=%([\w.\-]+)", op.attrs)
+                if bm:
+                    sub = cost(bm.group(1))
+                    trips = _trip_count(comps, cm_.group(1)) if cm_ else 1
+                    flops += trips * sub["flops"]
+                    traffic += trips * sub["traffic"]
+                    for k_, v in sub["coll"].items():
+                        coll[k_] = coll.get(k_, 0.0) + trips * v
+                    for k_, v in sub["coll_count"].items():
+                        coll_count[k_] = coll_count.get(k_, 0) + trips * v
+            elif op.opname in ("fusion", "call", "async-start"):
+                fm = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", op.attrs)
+                if fm:
+                    sub = cost(fm.group(1))
+                    flops += sub["flops"]
+                    # fusion internal traffic NOT added (fused in VMEM/registers)
+                    for k_, v in sub["coll"].items():
+                        coll[k_] = coll.get(k_, 0.0) + v
+                    for k_, v in sub["coll_count"].items():
+                        coll_count[k_] = coll_count.get(k_, 0) + v
+            elif op.opname == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", op.attrs)
+                subs = [cost(b) for b in branches if b in comps]
+                if subs:
+                    best = max(subs, key=lambda s: s["flops"])
+                    flops += best["flops"]
+                    traffic += best["traffic"]
+            base = op.opname.replace("-start", "")
+            if base in COLLECTIVES and not op.opname.endswith("-done"):
+                coll[base] = coll.get(base, 0.0) + out_bytes
+                coll_count[base] = coll_count.get(base, 0) + 1
+        memo[comp] = {"flops": flops, "traffic": traffic, "coll": coll, "coll_count": coll_count}
+        return memo[comp]
+
+    c = cost(entry) if entry else {"flops": 0, "traffic": 0, "coll": {}, "coll_count": {}}
+    return {
+        "flops": c["flops"],
+        "traffic_bytes": c["traffic"],
+        "collective_bytes": c["coll"],
+        "collective_counts": c["coll_count"],
+        "total_collective_bytes": sum(c["coll"].values()),
+        "entry": entry,
+    }

@@ -1,0 +1,23 @@
+"""Production mesh definitions (TPU v5e-256 pods).
+
+``make_production_mesh`` is a function (not module-level state) so importing
+this module never touches jax device initialization — the dry-run sets
+XLA_FLAGS before any jax import and only then builds meshes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (fake) devices the test process has."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

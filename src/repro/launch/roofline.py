@@ -1,0 +1,108 @@
+"""Roofline report from dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh), from the loop-corrected per-device HLO analysis:
+
+  compute term     = flops / PEAK_FLOPS
+  memory term      = traffic_bytes / HBM_BW
+  collective term  = collective_bytes / LINK_BW
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+MODEL_FLOPS uses 6·N·D (train) / 2·N·D (prefill/decode) with N = *active*
+params (MoE top-k), D = tokens per chip.
+
+Usage: python -m repro.launch.roofline [--dir experiments/dryrun] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+
+TERM_NAMES = ("compute", "memory", "collective")
+
+
+def terms(rec: Dict) -> Dict:
+    h = rec["hlo"]
+    t = {
+        "compute": h["flops"] / PEAK_FLOPS,
+        "memory": h["traffic_bytes"] / HBM_BW,
+        "collective": h["total_collective_bytes"] / LINK_BW,
+    }
+    dom = max(t, key=t.get)
+    mult = 6 if rec["mode"] == "train" else 2
+    model_flops = mult * rec["params_active"] * rec["tokens"] / rec["n_chips"]
+    return {
+        **t,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(h["flops"], 1.0),
+        "step_time_lb": max(t.values()),
+        "mfu_bound": model_flops / PEAK_FLOPS / max(max(t.values()), 1e-12),
+    }
+
+
+def load(dir_: str, tag: str = "") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        base = os.path.basename(path)
+        has_tag = base.count("__") >= 3
+        if bool(tag) != has_tag:
+            continue
+        if tag and not base.endswith(f"__{tag}.json"):
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(rec: Dict) -> str:
+    if rec.get("skipped"):
+        return (
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | SKIP | — | — | — | — | — | — |"
+            f" {rec['skipped']} |"
+        )
+    if not rec.get("ok"):
+        return (
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | FAIL | — | — | — | — | — | — |"
+            f" {rec.get('error','')[:60]} |"
+        )
+    t = terms(rec)
+    mem_gib = rec["memory"]["peak_device_bytes"] / 2**30
+    return (
+        f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | ok "
+        f"| {t['compute']*1e3:.2f} | {t['memory']*1e3:.2f} | {t['collective']*1e3:.2f} "
+        f"| **{t['dominant']}** | {t['useful_ratio']:.2f} | {mem_gib:.2f} | |"
+    )
+
+
+HEADER = (
+    "| arch | shape | mesh | status | compute (ms) | memory (ms) | collective (ms) "
+    "| dominant | useful ratio | peak GiB/dev | note |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|"
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default="experiments/roofline.md")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load(args.dir, args.tag)
+    lines = [HEADER] + [fmt_row(r) for r in recs]
+    out = "\n".join(lines)
+    print(out)
+    if args.md:
+        os.makedirs(os.path.dirname(args.md) or ".", exist_ok=True)
+        with open(args.md, "w") as f:
+            f.write(out + "\n")
+
+
+if __name__ == "__main__":
+    main()

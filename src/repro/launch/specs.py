@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct input specs for every (architecture x input-shape) pair.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these.  Modality frontends are stubs per the assignment: VLM patch
+embeddings (B, n_image_tokens, d) and audio frame embeddings
+(B, n_frames, d) arrive precomputed.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import Config, InputShape
+from repro.models import cache_shapes
+from repro.sharding.rules import Rules
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _extras(cfg: Config, batch: int) -> Dict:
+    m = cfg.model
+    out = {}
+    if m.n_image_tokens:
+        out["image"] = jax.ShapeDtypeStruct((batch, m.n_image_tokens, m.d_model), F32)
+    if m.encoder is not None:
+        out["frames"] = jax.ShapeDtypeStruct((batch, m.encoder.n_frames, m.d_model), F32)
+    return out
+
+
+def train_specs(cfg: Config, shape: InputShape) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), I32),
+        "targets": jax.ShapeDtypeStruct((b, s), I32),
+        **_extras(cfg, b),
+    }
+
+
+def prefill_specs(cfg: Config, shape: InputShape) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b, s), I32), **_extras(cfg, b)}
+
+
+def decode_specs(cfg: Config, shape: InputShape) -> Tuple:
+    """(token, positions, cache) SDS for one decode step with a seq_len cache."""
+    b, s = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((b, 1), I32)
+    positions = jax.ShapeDtypeStruct((b,), I32)
+    ex = _extras(cfg, b) or None
+    cache = cache_shapes(cfg.model, cfg.parallel, b, prompt_len=128, cache_len=s, extra_shapes=ex)
+    return token, positions, cache
+
+
+def batch_pspec(leaf, rules: Rules, batch: int, kind: str = "batch") -> P:
+    """Shard a host-batch or cache leaf.
+
+    The batch dim is located by size (position 0, or 1 for cache leaves
+    stacked over scanned layer groups).  kind="cache" additionally handles
+    the sequence dim right after the batch dim:
+
+      * batch unshardable (long_500k B=1): seq -> "data" (sequence-parallel
+        decode; the one-token attention reduction lowers to a psum),
+      * rules.cache_seq_tp (§Perf "cache_tp"): seq -> every mesh axis the
+        batch left unused — flash-decode layout; a 550 GB KV cache that
+        previously replicated across the model axis shards 16x further.
+    """
+    dims = leaf.shape
+    axes = [None] * len(dims)
+    cand = [i for i in range(min(2, len(dims))) if dims[i] == batch]
+    if not cand:
+        return P(*axes)
+    bidx = cand[-1]  # stacked scan caches carry (groups, B, ...)
+    b_axes = rules.batch_axes(batch)
+    if b_axes is not None:
+        axes[bidx] = b_axes
+    sdim = bidx + 1
+    if kind == "cache" and sdim < len(dims):
+        used = set()
+        if b_axes is not None:
+            used |= {b_axes} if isinstance(b_axes, str) else set(b_axes)
+        free = [a for a in (rules.pod_axis, rules.dp_axis, rules.tp_axis)
+                if rules.has_axis(a) and a not in used]
+        cands = []
+        if rules.cache_seq_tp:
+            if len(free) > 1:
+                cands.append(tuple(free))
+            cands += [(a,) for a in free]
+        elif b_axes is None and rules.shard_cache_seq and rules.dp_axis in free:
+            cands = [(rules.dp_axis,)]
+        for c in cands:
+            if c and rules.fits(dims[sdim], c):
+                axes[sdim] = c if len(c) > 1 else c[0]
+                break
+    return P(*axes)
+
+
+def batch_shardings(tree, rules: Rules, batch: int, kind: str = "batch"):
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(rules.mesh, batch_pspec(l, rules, batch, kind)), tree
+    )

@@ -1,0 +1,9 @@
+from repro.models.transformer import (  # noqa: F401
+    cache_shapes,
+    decode_step,
+    encode,
+    forward,
+    init_params,
+    params_shapes,
+    prefill,
+)

@@ -1,0 +1,235 @@
+"""Attention layer: GQA/MQA, causal, sliding-window, cross-attention.
+
+Three execution paths:
+
+  * naive      — materialize (Sq, Skv) scores; used when the score matrix is
+                 small (training at moderate seq, decode, cross-attn to short
+                 memory).
+  * chunked    — online-softmax over kv-chunks inside a scan over q-chunks
+                 ("flash attention in jnp"); the default for long prefill.
+                 This is also the reference semantics for the Pallas kernel
+                 in kernels/flash_attention.py.
+  * kernel     — pl.pallas_call flash attention (TPU target); enabled via
+                 ParallelismConfig.use_pallas, falls back to chunked.
+
+KV caches are position-explicit: each slot stores its absolute position
+(`kpos`, -1 = empty) so full caches and sliding-window ring buffers share one
+masking rule:   valid & kpos <= q_pos & (window == 0 | kpos > q_pos - window).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, normal_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": normal_init(kq, (d_model, n_heads * head_dim)),
+        "wk": normal_init(kk, (d_model, n_kv_heads * head_dim)),
+        "wv": normal_init(kv, (d_model, n_kv_heads * head_dim)),
+        "wo": normal_init(ko, (n_heads * head_dim, d_model), fan_in=n_heads * head_dim),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, s, h, d = x.shape
+    return x.reshape(b, s, h * d)
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """q_pos: (B, Sq); k_pos: (B, Skv). Returns bool (B, Sq, Skv)."""
+    qp = q_pos[:, :, None]
+    kp = k_pos[:, None, :]
+    m = kp >= 0
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    return m
+
+
+def _sdpa(q, k, v, mask) -> jnp.ndarray:
+    """q: (B,Sq,K,G,D); k,v: (B,Skv,K,D); mask: (B,Sq,Skv) -> (B,Sq,K,G,D)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+
+
+def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, q_chunk, kv_chunk):
+    """Online-softmax attention; same signature/result as _sdpa but O(chunk^2) memory.
+
+    Outer scan over q chunks, inner scan over kv chunks carrying the running
+    (max, denominator, accumulator) triple.
+    """
+    b, sq, kh, g, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # pad to multiples
+    pq = (-sq) % q_chunk
+    pk = (-skv) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=0)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=-1)
+    nq, nk = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+    scale = d**-0.5
+
+    qs = q.reshape(b, nq, q_chunk, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    ks = k.reshape(b, nk, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(b, nk, kv_chunk).transpose(1, 0, 2)
+
+    def q_step(_, qc):
+        qb, qp = qc  # (B,Cq,K,G,D), (B,Cq)
+
+        def kv_step(carry, kc):
+            m_run, l_run, acc = carry
+            kb, vb, kp = kc
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32) * scale
+            msk = _mask(qp, kp, causal, window)[:, None, None, :, :]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_chunk, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B,Cq,K,G,D)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, qps))  # (nq,B,Cq,K,G,D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, kh, g, d)
+    return out[:, :sq].astype(v.dtype)
+
+
+def attention(
+    p: Dict,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    q_pos: jnp.ndarray,
+    rope_theta: float = 0.0,
+    causal: bool = True,
+    window: int = 0,
+    memory: Optional[jnp.ndarray] = None,
+    mem_pos: Optional[jnp.ndarray] = None,
+    cache: Optional[Dict] = None,
+    mode: str = "train",
+    attn_chunk: int = 1024,
+    cache_len: int = 0,
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Self- or cross-attention.
+
+    mode: "train" (no cache), "prefill" (returns fresh cache), "decode"
+    (consumes/returns cache; x is (B, 1, d)).
+    memory: (B, M, d) for cross-attention (causal/window ignored).
+    Returns (out (B,S,d), cache or None).
+    """
+    b, s, _ = x.shape
+    g = n_heads // n_kv_heads
+    dtype = x.dtype
+    cross = memory is not None
+
+    q = _split_heads(x @ p["wq"].astype(dtype), n_heads)  # (B,S,H,D)
+    if cross:
+        if mode == "decode" and cache is not None:
+            k, v = cache["k"], cache["v"]
+            k_pos = cache["kpos"]
+            new_cache = cache
+        else:
+            src = memory.astype(dtype)
+            k = _split_heads(src @ p["wk"].astype(dtype), n_kv_heads)
+            v = _split_heads(src @ p["wv"].astype(dtype), n_kv_heads)
+            k_pos = (
+                mem_pos
+                if mem_pos is not None
+                else jnp.broadcast_to(jnp.arange(k.shape[1]), (b, k.shape[1]))
+            )
+            new_cache = {"k": k, "v": v, "kpos": k_pos} if mode == "prefill" else None
+        causal, window = False, 0
+    else:
+        k = _split_heads(x @ p["wk"].astype(dtype), n_kv_heads)
+        v = _split_heads(x @ p["wv"].astype(dtype), n_kv_heads)
+        if rope_theta:
+            q = apply_rope(q, q_pos, rope_theta)
+            k = apply_rope(k, q_pos, rope_theta)
+        if mode == "train":
+            k_pos = q_pos
+            new_cache = None
+        else:
+            c = cache_len if mode == "prefill" else cache["k"].shape[1]
+            if mode == "prefill":
+                ck = jnp.zeros((b, c, n_kv_heads, head_dim), dtype)
+                cv = jnp.zeros((b, c, n_kv_heads, head_dim), dtype)
+                ckpos = jnp.full((b, c), -1, jnp.int32)
+            else:
+                ck, cv, ckpos = cache["k"], cache["v"], cache["kpos"]
+            # slot: ring buffer when window-limited cache, else absolute position.
+            # At prefill only the last <=c tokens can live in the ring; slice them
+            # statically so the scatter has no duplicate indices.
+            if mode == "prefill" and s > c:
+                k_in, v_in, pos_in = k[:, -c:], v[:, -c:], q_pos[:, -c:]
+            else:
+                k_in, v_in, pos_in = k, v, q_pos
+            slot = pos_in % c
+            bidx = jnp.arange(b)[:, None]
+            ck = ck.at[bidx, slot].set(k_in)
+            cv = cv.at[bidx, slot].set(v_in)
+            ckpos = ckpos.at[bidx, slot].set(pos_in)
+            new_cache = {"k": ck, "v": cv, "kpos": ckpos}
+            if mode == "decode":
+                k, v, k_pos = ck, cv, ckpos
+            else:
+                k_pos = q_pos  # prefill attends within the fresh sequence
+
+    qh = q.reshape(b, s, n_kv_heads, g, head_dim)
+    naive_elems = s * k.shape[1]
+    if use_pallas and mode == "train" and not cross:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(qh, k, v, q_pos, k_pos, causal=causal, window=window)
+    elif attn_chunk and naive_elems > attn_chunk * attn_chunk * 4:
+        out = _chunked_sdpa(qh, k, v, q_pos, k_pos, causal, window, attn_chunk, attn_chunk)
+    else:
+        mask = _mask(q_pos, k_pos, causal, window)
+        out = _sdpa(qh, k, v, mask)  # (B,Sq,K,G,D)
+    out = _merge_heads(out.reshape(b, s, n_heads, head_dim))
+    return out @ p["wo"].astype(dtype), new_cache
+
+
+def self_cache_shape(batch: int, cache_len: int, n_kv_heads: int, head_dim: int, dtype):
+    """ShapeDtypeStruct pytree for a self-attention cache (dry-run friendly)."""
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cache_len, n_kv_heads, head_dim), dtype),
+        "v": jax.ShapeDtypeStruct((batch, cache_len, n_kv_heads, head_dim), dtype),
+        "kpos": jax.ShapeDtypeStruct((batch, cache_len), jnp.int32),
+    }

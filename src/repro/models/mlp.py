@@ -1,0 +1,30 @@
+"""Feed-forward blocks: SwiGLU (llama-style) and GELU (bert/whisper-style)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str) -> Dict:
+    ki, kg, kd = jax.random.split(key, 3)
+    p = {
+        "wi": normal_init(ki, (d_model, d_ff)),
+        "wd": normal_init(kd, (d_ff, d_model), fan_in=d_ff),
+    }
+    if act == "swiglu":
+        p["wg"] = normal_init(kg, (d_model, d_ff))
+    return p
+
+
+def apply_mlp(p: Dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    dtype = x.dtype
+    h = x @ p["wi"].astype(dtype)
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dtype)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wd"].astype(dtype)

@@ -1,0 +1,138 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded dispatch.
+
+Dispatch uses the gather/scatter ("dropping") formulation rather than GShard
+one-hot einsums: position-in-expert comes from a cumsum over the routing
+one-hot, tokens beyond capacity fall into a sacrificial slot that is sliced
+off, and the combine is a weighted gather.  Buffer memory is O(E*C*d) instead
+of O(S*E*C).  Under pjit the expert buffers are sharded over the mesh: the
+expert dim maps to the "model" axis when divisible (llama4: 128/16=8 experts
+per device, dispatch lowers to an all-to-all), otherwise experts stay
+replicated and each expert's d_ff is tensor-parallel (mixtral: 8 experts on a
+16-way axis).
+
+``apply_moe_dense`` is the oracle used by tests: all experts computed for all
+tokens, no capacity drops.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import normal_init
+from repro.models.mlp import apply_mlp, mlp_init
+from repro.sharding.rules import constrain, constrain_like_param
+
+
+def moe_init(key, d_model: int, d_ff: int, act: str, cfg: MoEConfig) -> Dict:
+    kr, ki, kg, kd, ks = jax.random.split(key, 5)
+    e = cfg.n_experts
+    p = {
+        "router": normal_init(kr, (d_model, e)),
+        "expert_wi": normal_init(ki, (e, d_model, d_ff), fan_in=d_model),
+        "expert_wd": normal_init(kd, (e, d_ff, d_model), fan_in=d_ff),
+    }
+    if act == "swiglu":
+        p["expert_wg"] = normal_init(kg, (e, d_model, d_ff), fan_in=d_model)
+    for i in range(cfg.n_shared_experts):
+        p[f"shared_{i}"] = mlp_init(jax.random.fold_in(ks, i), d_model, d_ff, act)
+    return p
+
+
+def _route(p: Dict, xf: jnp.ndarray, cfg: MoEConfig):
+    """xf: (N, d) -> (weights (N,k), experts (N,k), aux dict).
+
+    The router matmul runs in the compute dtype — upcasting xf to f32 first
+    materializes (and, under pjit, ALL-GATHERS) a full-width f32 copy of the
+    token buffer (§Perf llama4: ~1 TB/dev/step). Only the (N, E) logits are
+    carried in f32 for the softmax/top-k.
+    """
+    logits = (xf @ p["router"].astype(xf.dtype)).astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)  # (N, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss over the router distribution
+    sel = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32).sum(axis=1)  # (N, E)
+    frac_routed = sel.mean(axis=0) / cfg.top_k
+    mean_prob = probs.mean(axis=0)
+    lb = cfg.n_experts * jnp.sum(frac_routed * mean_prob)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {
+        "moe_lb_loss": cfg.router_aux_weight * lb,
+        "moe_z_loss": cfg.router_z_weight * z,
+    }
+    return w, idx, sel, aux
+
+
+def apply_moe(p: Dict, x: jnp.ndarray, act: str, cfg: MoEConfig) -> Tuple[jnp.ndarray, Dict]:
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    w, idx, sel, aux = _route(p, xf, cfg)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(n * k / e * cfg.capacity_factor))
+
+    # position of each (token, choice) within its expert's buffer
+    onehot = jax.nn.one_hot(idx.reshape(-1), e, dtype=jnp.int32)  # (N*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)  # exclusive prefix count per expert
+    pos = jnp.take_along_axis(pos, idx.reshape(-1, 1), axis=1).reshape(n, k)
+    kept = pos < cap
+    slot = jnp.where(kept, pos, cap)  # dropped -> sacrificial slot `cap`
+
+    # dispatch: (E, cap+1, d)
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k)).reshape(-1)
+    buf = buf.at[idx.reshape(-1), slot.reshape(-1)].set(xf[tok_idx])
+    buf = buf[:, :cap]
+    buf = constrain(buf, ("experts", "expert_cap", None))
+
+    # expert computation (E, cap, d_ff).
+    # §Perf note: pinning expert-weight copies (f32 or bf16) to the param
+    # sharding via with_sharding_constraint was tried and REFUTED twice —
+    # GSPMD canonicalized both to the same HLO and materialized ~40 GiB of
+    # extra weight copies with zero collective change (EXPERIMENTS.md §Perf).
+    dtype = x.dtype
+    h = jnp.einsum("ecd,edf->ecf", buf, p["expert_wi"].astype(dtype))
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["expert_wg"].astype(dtype))) * h
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["expert_wd"].astype(dtype))
+    out_buf = constrain(out_buf, ("experts", "expert_cap", None))
+
+    # combine: weighted gather; dropped slots read the zero pad row
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((e, 1, d), x.dtype)], axis=1)
+    gathered = out_buf[idx.reshape(-1), slot.reshape(-1)].reshape(n, k, d)
+    out = jnp.sum(gathered * w[..., None].astype(x.dtype), axis=1)
+
+    for key_ in sorted(p):
+        if key_.startswith("shared_"):
+            out = out + apply_mlp(p[key_], xf, act)
+    # expert utilisation metric (fraction of capacity used)
+    aux["moe_util"] = jnp.minimum(sel.sum(axis=0), cap).sum() / (e * cap)
+    return out.reshape(b, s, d), aux
+
+
+def apply_moe_dense(p: Dict, x: jnp.ndarray, act: str, cfg: MoEConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Oracle: every expert on every token, exact top-k combine, no drops."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    w, idx, _sel, aux = _route(p, xf, cfg)
+    dtype = x.dtype
+    h = jnp.einsum("nd,edf->enf", xf, p["expert_wi"].astype(dtype))
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("nd,edf->enf", xf, p["expert_wg"].astype(dtype))) * h
+    else:
+        h = jax.nn.gelu(h)
+    all_out = jnp.einsum("enf,efd->end", h, p["expert_wd"].astype(dtype))  # (E, N, d)
+    sel_out = jnp.take_along_axis(
+        all_out.transpose(1, 0, 2), idx[..., None], axis=1
+    )  # (N, k, d)
+    out = jnp.sum(sel_out * w[..., None].astype(x.dtype), axis=1)
+    for key_ in sorted(p):
+        if key_.startswith("shared_"):
+            out = out + apply_mlp(p[key_], xf, act)
+    return out.reshape(b, s, d), aux

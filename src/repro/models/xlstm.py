@@ -1,0 +1,304 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory) and sLSTM (scalar).
+
+mLSTM cell (per head, exponential input gate, stabilizer m):
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)
+    i'  = exp(ĩ_t - m_t)        f' = exp(f̃_t + m_{t-1} - m_t)
+    C_t = f' C_{t-1} + i' k_t v_tᵀ          n_t = f' n_{t-1} + i' k_t
+    h_t = (C_tᵀ q_t) / max(|n_t · q_t|, exp(-m_t))
+
+Training uses the **chunkwise-parallel form** (the TPU-native adaptation:
+intra-chunk attention-like matmuls feed the MXU; the O(S) recurrence only
+runs across chunk boundaries):
+
+    g_t   = Σ_{s<=t in chunk} f̃_s   (inclusive log-decay cumsum)
+    m_t   = max(g_t + m_prev, max_{s<=t}(g_t - g_s + ĩ_s))
+    h_t   = [Σ_{s<=t} e^{g_t-g_s+ĩ_s-m_t} (q_t·k_s) v_s
+             + e^{g_t+m_prev-m_t} q_t·C_prev] / max(|den_t|, e^{-m_t})
+    den_t = Σ_{s<=t} e^{g_t-g_s+ĩ_s-m_t} (q_t·k_s) + e^{g_t+m_prev-m_t} q_t·n_prev
+
+``mlstm_sequential`` is the oracle (tests assert chunkwise == sequential).
+
+sLSTM keeps the paper's sequential scan (memory mixing via per-head recurrent
+weights makes it non-associative — noted in DESIGN.md).
+
+Block wiring (pre-LN residual, d_ff==0 so blocks carry their own proj):
+  mLSTM block:  up-proj (2x) -> [conv+silu -> q,k,v; gates from conv'd branch]
+                -> cell -> head groupnorm -> ⊙ silu(z) -> down-proj
+  sLSTM block:  conv+silu -> i,f,z,o preacts (+ block-diag recurrence R h)
+                -> cell -> groupnorm -> gated FFN (pf 4/3) -> down-proj
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import group_norm, normal_init
+from repro.models.recurrent import _causal_conv, CONV_W
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_model: int, n_heads: int, qk_factor: float = 0.5) -> Dict:
+    di = 2 * d_model  # projection factor 2
+    dqk = int(di * qk_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "xl_up": normal_init(ks[0], (d_model, 2 * di)),
+        "xl_conv": normal_init(ks[1], (CONV_W, di), fan_in=CONV_W),
+        "xl_q": normal_init(ks[2], (di, dqk)),
+        "xl_k": normal_init(ks[3], (di, dqk)),
+        "xl_v": normal_init(ks[4], (di, di)),
+        "xl_if": normal_init(ks[5], (di, 2 * n_heads)),
+        "xl_if_b": jnp.concatenate(
+            [jnp.zeros((n_heads,)), jnp.linspace(3.0, 6.0, n_heads)]  # forget-gate bias init
+        ),
+        "xl_down": normal_init(ks[6], (di, d_model), fan_in=di),
+    }
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def mlstm_sequential(q, k, v, ig, fg, state=None):
+    """Oracle / decode path. q,k: (B,S,H,Dk); v: (B,S,H,Dv); ig,fg: (B,S,H).
+
+    state: (C (B,H,Dk,Dv), n (B,H,Dk), m (B,H)) or None.
+    Returns h (B,S,H,Dv), final state.
+    """
+    b, s, hh, dk = q.shape
+    dv = v.shape[-1]
+    scale = dk**-0.5
+    if state is None:
+        state = (
+            jnp.zeros((b, hh, dk, dv), jnp.float32),
+            jnp.zeros((b, hh, dk), jnp.float32),
+            jnp.full((b, hh), -1e30, jnp.float32),
+        )
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs  # (B,H,Dk) ...
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            kt[..., :, None].astype(jnp.float32) * vt[..., None, :].astype(jnp.float32)
+        )
+        n = fp[..., None] * n + ip[..., None] * kt.astype(jnp.float32)
+        qs = qt.astype(jnp.float32) * scale
+        num = jnp.einsum("bhk,bhkv->bhv", qs, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    tx = lambda a: a.transpose(1, 0, 2, 3) if a.ndim == 4 else a.transpose(1, 0, 2)
+    (C, n, m), hs = jax.lax.scan(
+        step, state, (tx(q), tx(k), tx(v), ig.transpose(1, 0, 2), fg.transpose(1, 0, 2))
+    )
+    return hs.transpose(1, 0, 2, 3), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, ig, fg, state=None, chunk: int = 64):
+    """Chunkwise-parallel mLSTM; numerically == mlstm_sequential (tested)."""
+    b, s, hh, dk = q.shape
+    dv = v.shape[-1]
+    scale = dk**-0.5
+    if state is None:
+        state = (
+            jnp.zeros((b, hh, dk, dv), jnp.float32),
+            jnp.zeros((b, hh, dk), jnp.float32),
+            jnp.full((b, hh), -1e30, jnp.float32),
+        )
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)  # exp -> 0
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // chunk
+    rs = lambda a: a.reshape(b, nc, chunk, *a.shape[2:]).transpose(1, 0, *range(2, a.ndim + 1))
+    qs, ks_, vs = rs(q), rs(k), rs(v)  # (nc, B, L, H, ...)
+    igs, fgs = rs(ig), rs(fg)  # (nc, B, L, H)
+
+    def chunk_step(carry, xs):
+        C, n, m_prev = carry
+        qc, kc, vc, ic, fc = xs
+        icf = ic.astype(jnp.float32)
+        fcf = fc.astype(jnp.float32)
+        g = jnp.cumsum(fcf, axis=1)  # (B,L,H) inclusive log-decay
+        # intra-chunk log weights: w[t,s] = g_t - g_s + i_s  (s <= t)
+        lw = g[:, :, None, :] - g[:, None, :, :] + icf[:, None, :, :]  # (B,T,S,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lw = jnp.where(tri[None, :, :, None], lw, -1e30)
+        m_intra = jnp.max(lw, axis=2)  # (B,T,H)
+        m_inter = g + m_prev[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)  # (B,T,H)
+        wts = jnp.exp(lw - m_t[:, :, None, :])  # (B,T,S,H)
+
+        qf = qc.astype(jnp.float32) * scale
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        qk = jnp.einsum("bthd,bshd->btsh", qf, kf) * wts  # (B,T,S,H)
+        num_intra = jnp.einsum("btsh,bshv->bthv", qk, vf)
+        den_intra = jnp.sum(qk, axis=2)  # (B,T,H)
+        dec = jnp.exp(m_inter - m_t)  # (B,T,H)
+        num_inter = jnp.einsum("bthk,bhkv->bthv", qf, C) * dec[..., None]
+        den_inter = jnp.einsum("bthk,bhk->bth", qf, n) * dec
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        h = (num_intra + num_inter) / den[..., None]  # (B,T,H,Dv)
+
+        # state update to end of chunk
+        g_last = g[:, -1]  # (B,H)
+        m_new = jnp.maximum(g_last + m_prev, jnp.max(g_last[:, None] - g + icf, axis=1))
+        sw = jnp.exp(g_last[:, None] - g + icf - m_new[:, None])  # (B,S,H)
+        C = jnp.exp(g_last + m_prev - m_new)[..., None, None] * C + jnp.einsum(
+            "bsh,bshk,bshv->bhkv", sw, kf, vf
+        )
+        n = jnp.exp(g_last + m_prev - m_new)[..., None] * n + jnp.einsum("bsh,bshk->bhk", sw, kf)
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, state, (qs, ks_, vs, igs, fgs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, hh, dv)[:, :s]
+    return h, (C, n, m)
+
+
+def apply_mlstm(
+    p: Dict,
+    x: jnp.ndarray,
+    n_heads: int,
+    cache: Optional[Dict] = None,
+    mode: str = "train",
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    dtype = x.dtype
+    b, s, d = x.shape
+    up = x @ p["xl_up"].astype(dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(p["xl_conv"], xm, conv_state)
+    xc = jax.nn.silu(xc)
+    q = _heads(xc @ p["xl_q"].astype(dtype), n_heads)
+    k = _heads(xc @ p["xl_k"].astype(dtype), n_heads)
+    v = _heads(xm @ p["xl_v"].astype(dtype), n_heads)
+    gates = (xc @ p["xl_if"].astype(dtype)).astype(jnp.float32) + p["xl_if_b"]
+    ig, fgp = jnp.split(gates, 2, axis=-1)  # (B,S,H)
+    fg = jax.nn.log_sigmoid(fgp)
+
+    state = cache["state"] if cache is not None else None
+    if mode == "decode" or s == 1:
+        h, new_state = mlstm_sequential(q, k, v, ig, fg, state)
+    else:
+        h, new_state = mlstm_chunkwise(q, k, v, ig, fg, state, chunk=chunk)
+    h = group_norm(h, n_heads).astype(dtype).reshape(b, s, -1)
+    out = (h * jax.nn.silu(z)) @ p["xl_down"].astype(dtype)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": new_conv, "state": new_state}
+    return out, new_cache
+
+
+def mlstm_cache_shape(batch: int, d_model: int, n_heads: int, qk_factor: float, dtype):
+    di = 2 * d_model
+    dqk = int(di * qk_factor)
+    dk, dv = dqk // n_heads, di // n_heads
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, CONV_W - 1, di), dtype),
+        "state": (
+            jax.ShapeDtypeStruct((batch, n_heads, dk, dv), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n_heads, dk), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n_heads), jnp.float32),
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, d_model: int, n_heads: int) -> Dict:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 6)
+    dff = int(math.ceil(4 * d_model / 3 / 64) * 64)
+    return {
+        "sl_conv": normal_init(ks[0], (CONV_W, d_model), fan_in=CONV_W),
+        "sl_w": normal_init(ks[1], (d_model, 4 * d_model)),
+        "sl_r": normal_init(ks[2], (n_heads, dh, 4 * dh), fan_in=dh),
+        "sl_b": jnp.concatenate(
+            [jnp.zeros((d_model,)), jnp.ones((d_model,)) * 2.0, jnp.zeros((2 * d_model,))]
+        ),
+        "sl_up": normal_init(ks[3], (d_model, dff)),
+        "sl_upg": normal_init(ks[4], (d_model, dff)),
+        "sl_down": normal_init(ks[5], (dff, d_model), fan_in=dff),
+    }
+
+
+def apply_slstm(
+    p: Dict,
+    x: jnp.ndarray,
+    n_heads: int,
+    cache: Optional[Dict] = None,
+    mode: str = "train",
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    dtype = x.dtype
+    b, s, d = x.shape
+    dh = d // n_heads
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(p["sl_conv"], x, conv_state)
+    xc = jax.nn.silu(xc)
+    pre = (xc @ p["sl_w"].astype(dtype)).astype(jnp.float32) + p["sl_b"]  # (B,S,4d)
+
+    if cache is not None and "state" in cache:
+        c0, n0, m0, h0 = cache["state"]
+    else:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.ones((b, d), jnp.float32)
+        m0 = jnp.zeros((b, d), jnp.float32)
+        h0 = jnp.zeros((b, d), jnp.float32)
+
+    rw = p["sl_r"].astype(jnp.float32)  # (H, dh, 4dh)
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        hh = h.reshape(b, n_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, rw).reshape(b, 4 * d)
+        # interleave per-head recurrent contributions into the i,f,z,o layout
+        ri, rf, rz, ro = jnp.split(rec.reshape(b, n_heads, 4, dh), 4, axis=2)
+        rcat = jnp.concatenate(
+            [a.reshape(b, d) for a in (ri, rf, rz, ro)], axis=-1
+        )
+        it, ft, zt, ot = jnp.split(pre_t + rcat, 4, axis=-1)
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c = fp * c + ip * jnp.tanh(zt)
+        n = fp * n + ip
+        h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h_new), h_new
+
+    (c, n, m, h_last), hs = jax.lax.scan(step, (c0, n0, m0, h0), pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)  # (B,S,d)
+    h = group_norm(h.reshape(b, s, n_heads, dh), n_heads).reshape(b, s, d).astype(dtype)
+    ff = (h @ p["sl_up"].astype(dtype)) * jax.nn.gelu(h @ p["sl_upg"].astype(dtype))
+    out = ff @ p["sl_down"].astype(dtype)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": new_conv, "state": (c, n, m, h_last)}
+    return out, new_cache
+
+
+def slstm_cache_shape(batch: int, d_model: int, dtype):
+    f32 = jnp.float32
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, CONV_W - 1, d_model), dtype),
+        "state": tuple(jax.ShapeDtypeStruct((batch, d_model), f32) for _ in range(4)),
+    }

@@ -1,0 +1,79 @@
+"""Batched serving engine: prefill + greedy/temperature decode over KV or
+recurrent-state caches.
+
+Slot-based batching: a fixed batch of request slots decodes in lock-step
+(one jitted decode_step per token); finished requests stop contributing via
+an EOS mask while their slots keep shape stability.  This is the serving
+counterpart exercised by the decode dry-run shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Config
+from repro.models import decode_step, prefill
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, steps)
+    logprobs: np.ndarray  # (B, steps)
+    steps: int
+
+
+class Engine:
+    def __init__(self, cfg: Config, params, cache_len: int = 0, eos_id: int = -1):
+        self.cfg = cfg
+        self.params = params
+        self.eos_id = eos_id
+        self.cache_len = cache_len or (cfg.seq_len + 64)
+        m, p = cfg.model, cfg.parallel
+
+        def _prefill(params, tokens, extra):
+            return prefill(m, p, params, tokens, extra=extra, cache_len=self.cache_len)
+
+        def _decode(params, cache, tok, pos):
+            return decode_step(m, p, params, cache, tok, pos)
+
+        self._prefill = jax.jit(_prefill, static_argnames=())
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    def generate(
+        self,
+        prompts: np.ndarray,
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        key: Optional[jax.Array] = None,
+        extra: Optional[Dict] = None,
+    ) -> GenerationResult:
+        b, s = prompts.shape
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts, jnp.int32), extra)
+        pos = jnp.full((b,), s, jnp.int32)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        done = jnp.zeros((b,), bool)
+        outs: List[np.ndarray] = []
+        lps: List[np.ndarray] = []
+        key = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(max_new_tokens):
+            outs.append(np.asarray(tok[:, 0]))
+            lp = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32), axis=-1)
+            lps.append(np.asarray(jnp.take_along_axis(lp, tok, axis=-1)[:, 0]))
+            done = done | (tok[:, 0] == self.eos_id)
+            if bool(done.all()):
+                break
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            pos = pos + 1
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits[:, -1] / temperature, axis=-1)
+                tok = nxt[:, None].astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return GenerationResult(
+            tokens=np.stack(outs, axis=1), logprobs=np.stack(lps, axis=1), steps=len(outs)
+        )

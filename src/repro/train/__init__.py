@@ -1,0 +1,8 @@
+from repro.train.loss import cross_entropy, make_loss_fn  # noqa: F401
+from repro.train.train_state import TrainState  # noqa: F401
+from repro.train.trainer import (  # noqa: F401
+    eval_loss,
+    init_state,
+    make_train_step,
+    train_loop,
+)

@@ -1,0 +1,57 @@
+"""Pytree checkpointing to .npz (no external deps).
+
+Leaves are addressed by their tree path; restore requires a structural
+template (an existing TrainState / params tree) so dtypes/shapes are
+validated on load.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save(path: str, tree: PyTree) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for p, leaf in flat:
+        arrays[_path_str(p)] = np.asarray(leaf)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = _path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,49 @@
+"""Losses: next-token / MLM cross-entropy with MoE auxiliaries."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Config
+from repro.models import forward
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray, mask: Optional[jnp.ndarray] = None):
+    """logits (B,S,V) f32, targets (B,S) int32 -> scalar mean CE over mask."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def make_loss_fn(cfg: Config, with_aux: bool = True):
+    """loss_fn(params, batch) -> (loss, metrics) for the trainer / grad_stats.
+
+    batch: {"tokens": (B,S) int32, "targets": (B,S) int32, optional "mask",
+            optional "image" (B,N,d) / "frames" (B,F,d)}.
+    """
+    m, p = cfg.model, cfg.parallel
+
+    def loss_fn(params, batch) -> Tuple[jnp.ndarray, Dict]:
+        extra = {}
+        if "image" in batch:
+            extra["image"] = batch["image"]
+        if "frames" in batch:
+            extra["frames"] = batch["frames"]
+        logits, aux, _ = forward(
+            m, p, params, batch["tokens"], extra=extra or None, mode="train"
+        )
+        ce = cross_entropy(logits, batch["targets"], batch.get("mask"))
+        total = ce + aux["moe_lb_loss"] + aux["moe_z_loss"]
+        metrics = {"ce": ce, **aux}
+        if not with_aux:
+            return total
+        return total, metrics
+
+    return loss_fn

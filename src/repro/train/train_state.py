@@ -1,0 +1,10 @@
+"""Train state container."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: Any  # int32 scalar (mirrors opt_state["step"], kept for convenience)

@@ -1,0 +1,141 @@
+"""Training loop: builds the jitted train_step wiring VRGD stats into the
+optimizer, with optional mesh sharding (pjit) and the two GSNR sources.
+
+The train step is the paper's Algorithm 1/3/5 end to end:
+
+  1. gradient moments over k groups   (microbatch scan | data-axis shard_map)
+  2. GSNR -> normalize -> clip        (inside the VR optimizer transform)
+  3. element-wise scaled update
+
+Baseline optimizers take the plain gradient path (single backward, no Σg²),
+so VR-vs-base step-time overhead is measurable (benchmarks/bench_overhead.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Config
+from repro.core import grad_only, grad_stats, gsnr_scale, gsnr_summary, make_optimizer
+from repro.core.distributed import device_grad_stats_fn
+from repro.models import init_params
+from repro.models.common import global_norm
+from repro.train.loss import make_loss_fn
+from repro.train.train_state import TrainState
+
+_tm = jax.tree_util.tree_map
+
+
+def make_train_step(
+    cfg: Config,
+    loss_fn: Optional[Callable] = None,
+    mesh=None,
+    log_gsnr: bool = False,
+) -> Tuple[Callable, Any]:
+    """Returns (train_step(state, batch) -> (state, metrics), optimizer)."""
+    opt_cfg = cfg.optimizer
+    opt = make_optimizer(opt_cfg, use_pallas=cfg.parallel.use_pallas)
+    loss_fn = loss_fn or make_loss_fn(cfg)
+    is_vr = opt_cfg.is_vr
+    use_device_stats = is_vr and opt_cfg.gsnr_source == "data_axis" and mesh is not None
+    if use_device_stats:
+        stats_fn = device_grad_stats_fn(
+            lambda p, b: loss_fn(p, b), mesh, has_aux=True
+        )
+
+    def train_step(state: TrainState, batch, with_stats: bool = True) -> Tuple[TrainState, Dict]:
+        if is_vr and with_stats:
+            if use_device_stats:
+                loss, aux, stats = stats_fn(state.params, batch)
+            else:
+                loss, aux, stats = grad_stats(
+                    loss_fn, state.params, batch, opt_cfg.k, has_aux=True,
+                    method=opt_cfg.stats_method,
+                )
+            grads = stats.mean
+        elif is_vr:
+            # amortized-GSNR "stale" step: microbatched mean gradient only —
+            # the Σg² tree (one param-sized f32 buffer) is skipped (§Perf)
+            loss, aux, stats_ = grad_stats(
+                loss_fn, state.params, batch, opt_cfg.k, has_aux=True,
+                method=opt_cfg.stats_method, squares=False,
+            )
+            grads, stats = stats_.mean, None
+        else:
+            loss, aux, grads = grad_only(loss_fn, state.params, batch, has_aux=True)
+            stats = None
+        gnorm = global_norm(grads)
+        if opt_cfg.grad_clip > 0:
+            scale = jnp.minimum(1.0, opt_cfg.grad_clip / (gnorm + 1e-9))
+            grads = _tm(lambda g: g * scale, grads)
+        upd, opt_state = opt.update(grads, state.opt_state, state.params, stats=stats)
+        params = _tm(lambda p, u: (p + u).astype(p.dtype), state.params, upd)
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "update_norm": global_norm(upd),
+            **(aux or {}),
+        }
+        if log_gsnr and stats is not None:
+            metrics.update(gsnr_summary(gsnr_scale(stats, opt_cfg.gamma), opt_cfg.gamma))
+        return TrainState(params, opt_state, opt_state["step"]), metrics
+
+    return train_step, opt
+
+
+def init_state(cfg: Config, key=None, params=None) -> TrainState:
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    if params is None:
+        params = init_params(cfg.model, key, scan_layers=cfg.parallel.scan_layers)
+    opt = make_optimizer(cfg.optimizer)
+    opt_state = opt.init(params)
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32))
+
+
+def eval_loss(cfg: Config, loss_fn, params, batches: Iterable) -> float:
+    """Mean loss over an eval stream (generalization-gap measurements)."""
+    f = jax.jit(lambda p, b: loss_fn(p, b)[0])
+    losses = [float(f(params, b)) for b in batches]
+    return sum(losses) / max(len(losses), 1)
+
+
+def train_loop(
+    cfg: Config,
+    batches: Iterable,
+    steps: int,
+    state: Optional[TrainState] = None,
+    loss_fn: Optional[Callable] = None,
+    log_every: int = 0,
+    log_gsnr: bool = False,
+):
+    """Simple driver used by examples/benchmarks. Returns (state, history).
+
+    With cfg.optimizer.gsnr_refresh = R > 1, only every R-th step pays the
+    k-group Σg² pass; the others run a plain backward with the stale,
+    b3-smoothed GSNR momentum (beyond-paper amortization, §Perf)."""
+    loss_fn = loss_fn or make_loss_fn(cfg)
+    step_fn, _ = make_train_step(cfg, loss_fn, log_gsnr=log_gsnr)
+    supports_stale = cfg.optimizer.name in ("vr_adam", "vr_lamb")
+    refresh = max(1, cfg.optimizer.gsnr_refresh) if supports_stale else 1
+    full_step = jax.jit(lambda s, b: step_fn(s, b, True), donate_argnums=0)
+    stale_step = jax.jit(lambda s, b: step_fn(s, b, False), donate_argnums=0)
+    state = state or init_state(cfg)
+    history = []
+    it = iter(batches)
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(it)
+        fn = full_step if (refresh == 1 or i % refresh == 0) else stale_step
+        state, metrics = fn(state, batch)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            m = {k_: float(v) for k_, v in metrics.items()}
+            m["step"], m["wall"] = i, time.time() - t0
+            history.append(m)
+            print(
+                f"  step {i:5d} loss {m['loss']:.4f} |g| {m['grad_norm']:.3f}"
+                + (f" gsnr {m.get('gsnr/mean', 0):.3f}" if "gsnr/mean" in m else "")
+            )
+    return state, history

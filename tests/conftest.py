@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benchmarks must see
+# the single real CPU device; only the dry-run (and subprocess tests) fake
+# device counts.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,46 @@
+"""Checkpoint roundtrip for full train states."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.train import init_state
+from repro.train.checkpoint import restore, save
+
+
+def test_roundtrip_train_state(tmp_path):
+    cfg = get_smoke("granite-3-2b")
+    state = init_state(cfg)
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save(path, state)
+    like = init_state(cfg, key=jax.random.PRNGKey(99))  # different values, same structure
+    restored = restore(path, like)
+    for a, b in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_validates_shapes(tmp_path):
+    path = os.path.join(tmp_path, "c.npz")
+    save(path, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        restore(path, {"w": jnp.zeros((5,))})
+    with pytest.raises(KeyError):
+        restore(path, {"other": jnp.zeros((4,))})
+
+
+def test_resume_training_continues(tmp_path):
+    from repro.data import lm_batches
+    from repro.train import train_loop
+
+    cfg = get_smoke("internlm2-1.8b").replace(global_batch=8, seq_len=16)
+    stream = lm_batches(cfg.model.vocab_size, 8, 16, seed=0)
+    state, _ = train_loop(cfg, stream, steps=3)
+    path = os.path.join(tmp_path, "s.npz")
+    save(path, state)
+    restored = restore(path, init_state(cfg))
+    assert int(restored.step) == 3
+    state2, hist = train_loop(cfg, stream, steps=2, state=restored, log_every=1)
+    assert int(state2.step) == 5

@@ -1,0 +1,54 @@
+"""Device-wise (shard_map) GSNR statistics == microbatch statistics.
+
+Needs >1 device, so the check runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main test process
+must keep seeing 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import grad_stats, device_grad_stats_fn
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+key = jax.random.PRNGKey(0)
+X = jax.random.normal(key, (64, 10))
+W = jnp.arange(1.0, 11.0)
+Y = X @ W
+
+def loss_fn(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] - y) ** 2)
+
+params = {"w": jnp.ones(10) * 0.3}
+for fused in (True, False):
+    f = jax.jit(device_grad_stats_fn(loss_fn, mesh, fused=fused))
+    l1, _, s1 = f(params, (X, Y))
+    l2, _, s2 = grad_stats(loss_fn, params, (X, Y), 8)
+    assert np.allclose(float(l1), float(l2), rtol=1e-5)
+    assert np.allclose(s1.mean["w"], s2.mean["w"], rtol=1e-4, atol=1e-6)
+    assert np.allclose(s1.sq_mean["w"], s2.sq_mean["w"], rtol=1e-4, atol=1e-6)
+    assert s1.k == 8
+
+# fused path emits exactly ONE all-reduce for the stats payload
+txt = jax.jit(device_grad_stats_fn(loss_fn, mesh, fused=True)).lower(params, (X, Y)).compile().as_text()
+n_ar = txt.count(" all-reduce(")
+assert n_ar <= 2, f"expected fused stats reduction, got {n_ar} all-reduces"
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_device_stats_match_microbatch_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True, timeout=300
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

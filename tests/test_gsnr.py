@@ -1,0 +1,104 @@
+"""Unit + property tests for the GSNR pipeline (paper eq. 2/7/8/9)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GradStats, clip_ratio, gsnr_scale, normalize_per_layer, raw_gsnr, variance
+
+settings = hypothesis.settings(max_examples=50, deadline=None)
+
+trees = st.integers(3, 40).flatmap(
+    lambda n: st.tuples(
+        hnp.arrays(np.float32, (n,), elements=st.floats(-3, 3, width=32)),
+        hnp.arrays(np.float32, (n,), elements=st.floats(0, 9, width=32)),
+    )
+)
+
+
+def make_stats(mean, extra_sq, k=8):
+    mean = jnp.asarray(mean)
+    sq = jnp.square(mean) + jnp.asarray(extra_sq)  # guarantees var >= 0 pre-clip
+    return GradStats(mean={"w": mean}, sq_mean={"w": sq}, k=k)
+
+
+@settings
+@hypothesis.given(trees)
+def test_variance_nonnegative(data):
+    mean, extra = data
+    stats = make_stats(mean, extra)
+    var = variance(stats)["w"]
+    assert np.all(np.asarray(var) >= 0)
+    np.testing.assert_allclose(np.asarray(var), extra, rtol=1e-4, atol=1e-5)
+
+
+@settings
+@hypothesis.given(trees, st.floats(0.01, 0.9))
+def test_scale_bounds(data, gamma):
+    stats = make_stats(*data)
+    scale = gsnr_scale(stats, gamma=gamma)["w"]
+    s = np.asarray(scale)
+    assert np.all(s >= gamma - 1e-6)
+    assert np.all(s <= 1.0 + 1e-6)
+
+
+@settings
+@hypothesis.given(trees)
+def test_normalized_mean_is_one(data):
+    mean, extra = data
+    hypothesis.assume(float(np.max(np.abs(mean))) > 1e-3)  # degenerate all-zero grad
+    stats = make_stats(mean, extra)
+    r = normalize_per_layer(raw_gsnr(stats))["w"]
+    m = float(np.mean(np.asarray(r)))
+    assert m == pytest.approx(1.0, rel=1e-3)
+
+
+def test_gamma_one_collapses_to_identity_scale():
+    """gamma=1 clips r to exactly 1 -> VRGD == base optimizer (paper §7.3)."""
+    stats = make_stats(np.random.RandomState(0).randn(32).astype(np.float32),
+                       np.random.RandomState(1).rand(32).astype(np.float32))
+    scale = gsnr_scale(stats, gamma=1.0)["w"]
+    np.testing.assert_allclose(np.asarray(scale), 1.0)
+
+
+def test_zero_variance_largest_coordinate_full_rate():
+    """Identical group gradients (no noise): r -> g^2/eps, so after per-layer
+    normalization the ranking follows |g| — the largest coordinate gets the
+    full rate, everything stays >= gamma (no coordinate dies)."""
+    mean = jnp.array([0.5, -1.0, 2.0])
+    stats = GradStats(mean={"w": mean}, sq_mean={"w": jnp.square(mean)}, k=4)
+    scale = np.asarray(gsnr_scale(stats, gamma=0.1)["w"])
+    assert scale[2] == pytest.approx(1.0)
+    assert np.all(scale >= 0.1 - 1e-6)
+    assert scale[1] > scale[0]  # ordering follows |g|
+
+
+def test_noisy_coordinate_damped():
+    """A coordinate with tiny signal / huge noise hits the gamma floor."""
+    mean = jnp.array([1.0, 1.0, 1e-4])
+    sq = jnp.square(mean) + jnp.array([1e-6, 1e-6, 10.0])
+    stats = GradStats(mean={"w": mean}, sq_mean={"w": sq}, k=8)
+    scale = gsnr_scale(stats, gamma=0.1)["w"]
+    assert float(scale[2]) == pytest.approx(0.1)
+    assert float(scale[0]) == pytest.approx(1.0)
+
+
+def test_clip_ratio_range():
+    r = {"a": jnp.array([0.0, 0.05, 0.5, 3.0])}
+    out = clip_ratio(r, 0.1)["a"]
+    np.testing.assert_allclose(np.asarray(out), [0.1, 0.1, 0.5, 1.0])
+
+
+def test_multi_layer_normalization_independent():
+    """Each tensor ("layer") normalizes independently (paper eq. 8)."""
+    stats = GradStats(
+        mean={"a": jnp.array([1.0, 2.0]), "b": jnp.array([10.0, 20.0, 30.0])},
+        sq_mean={"a": jnp.array([2.0, 5.0]), "b": jnp.array([101.0, 402.0, 903.0])},
+        k=8,
+    )
+    r = normalize_per_layer(raw_gsnr(stats))
+    assert float(jnp.mean(r["a"])) == pytest.approx(1.0, rel=1e-4)
+    assert float(jnp.mean(r["b"])) == pytest.approx(1.0, rel=1e-4)

@@ -1,0 +1,116 @@
+"""Pallas kernel sweeps: shapes x dtypes against the pure-jnp oracles."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.vr_adam import vr_adam_inner
+from repro.kernels.vr_update import vr_scale
+
+SIZES = [7, 128, 1000, 4096, 12345]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_vr_scale_sweep(n, dtype):
+    key = jax.random.PRNGKey(n)
+    g = (jax.random.normal(key, (n,)) * 0.2).astype(dtype)
+    g2 = (jnp.square(g.astype(jnp.float32)) + jax.random.uniform(jax.random.fold_in(key, 1), (n,)) * 0.05).astype(dtype)
+    sg, r = vr_scale(g, g2, 0.1, 1e-12)
+    sg_r, r_r = ref.vr_scale_ref(g, g2, 0.1, 1e-12)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(sg, np.float32), np.asarray(sg_r, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_r), atol=tol, rtol=tol)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    hnp.arrays(np.float32, st.integers(4, 300), elements=st.floats(-2, 2, width=32)),
+    st.floats(0.01, 0.99),
+)
+def test_vr_scale_property(gnp, gamma):
+    g = jnp.asarray(gnp)
+    g2 = jnp.square(g) + 0.01
+    sg, r = vr_scale(g, g2, float(gamma), 1e-12)
+    assert np.all(np.asarray(r) >= gamma - 1e-5)
+    assert np.all(np.asarray(r) <= 1 + 1e-5)
+    np.testing.assert_allclose(np.asarray(sg), np.asarray(r * g), atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [64, 2048, 9999])
+def test_vr_adam_sweep(n):
+    key = jax.random.PRNGKey(n)
+    ks = jax.random.split(key, 5)
+    g = jax.random.normal(ks[0], (n,)) * 0.1
+    g2 = jnp.square(g) + jax.random.uniform(ks[1], (n,)) * 0.01
+    m = jax.random.normal(ks[2], (n,)) * 0.05
+    v = jax.random.uniform(ks[3], (n,)) * 0.01
+    p = jax.random.uniform(ks[4], (n,))
+    kw = dict(b1=0.9, b2=0.999, b3=0.9, eps=1e-8, gamma=0.1, gsnr_eps=1e-12)
+    outs = vr_adam_inner(g, g2, m, v, p, jnp.float32(0.19), jnp.float32(0.002), jnp.float32(0.19), **kw)
+    refs = ref.vr_adam_inner_ref(g, g2, m, v, p, bc1=0.19, bc2=0.002, bc3=0.19, **kw)
+    for name, a, b in zip("direction/m/v/p".split("/"), outs, refs):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4, err_msg=name)
+
+
+def test_vr_adam_kernel_equals_jnp_optimizer_path():
+    """The use_pallas VR-Adam transform == the jnp VR-Adam transform."""
+    from repro.configs.base import OptimizerConfig
+    from repro.core import GradStats, make_optimizer
+
+    key = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(key, (33, 7)), "b": jax.random.normal(key, (5,))}
+    g = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    sq = jax.tree_util.tree_map(lambda x: jnp.square(x) + 0.001, g)
+    stats = GradStats(mean=g, sq_mean=sq, k=8)
+    cfg = OptimizerConfig(name="vr_adam", lr=0.01, schedule="constant", weight_decay=0.01)
+    o_j = make_optimizer(cfg, use_pallas=False)
+    o_k = make_optimizer(cfg, use_pallas=True)
+    s_j, s_k = o_j.init(params), o_k.init(params)
+    for _ in range(3):
+        u_j, s_j = o_j.update(g, s_j, params, stats=stats)
+        u_k, s_k = o_k.update(g, s_k, params, stats=stats)
+    for a, b in zip(jax.tree_util.tree_leaves(u_j), jax.tree_util.tree_leaves(u_k)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4)
+
+
+ATTN_CASES = [
+    # (B, Sq, Skv, H, KV, D, causal, window)
+    (2, 128, 128, 4, 4, 64, True, 0),
+    (1, 256, 256, 8, 2, 64, True, 64),
+    (2, 130, 130, 4, 1, 32, True, 0),       # partial blocks + MQA
+    (1, 64, 64, 4, 4, 128, False, 0),        # bidirectional
+    (1, 384, 384, 6, 3, 32, True, 100),      # window not block-aligned
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_sweep(case, dtype):
+    b, sq, skv, h, kvh, d, causal, window = case
+    key = jax.random.PRNGKey(hash(case) % 2**31)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, kvh, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    exp = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-3 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_block_size_invariance():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 200, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 200, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 200, 2, 32))
+    o1 = flash_attention(q, k, v, block_q=64, block_k=64)
+    o2 = flash_attention(q, k, v, block_q=128, block_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)

@@ -1,0 +1,134 @@
+"""Model-layer unit tests: attention paths, RoPE, norms, MLP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.models.attention import _chunked_sdpa, _mask, _sdpa, attention, attn_init
+from repro.models.common import apply_norm, apply_rope, norm_init
+
+
+def mk_qkv(key, b=2, s=64, h=4, kv=2, d=16, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 17])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_equals_naive(window, causal):
+    b, s, h, kv, d = 2, 100, 4, 2, 16
+    q, k, v = mk_qkv(jax.random.PRNGKey(0), b, s, h, kv, d)
+    qh = q.reshape(b, s, kv, h // kv, d)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    naive = _sdpa(qh, k, v, _mask(pos, pos, causal, window))
+    chunked = _chunked_sdpa(qh, k, v, pos, pos, causal, window, 32, 32)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(naive), atol=2e-5)
+
+
+def test_attention_matches_oracle():
+    b, s, h, kv, d = 2, 48, 4, 2, 16
+    q, k, v = mk_qkv(jax.random.PRNGKey(1), b, s, h, kv, d)
+    qh = q.reshape(b, s, kv, h // kv, d)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    out = _sdpa(qh, k, v, _mask(pos, pos, True, 0)).reshape(b, s, h, d)
+    exp = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+def test_prefill_then_decode_matches_full_forward():
+    """KV-cache correctness: decoding token t equals training logits at t."""
+    d_model, h, kv, hd = 32, 4, 2, 8
+    key = jax.random.PRNGKey(2)
+    p = attn_init(key, d_model, h, kv, hd)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 12, d_model))
+    pos = jnp.broadcast_to(jnp.arange(12), (2, 12))
+    full, _ = attention(
+        p, x, n_heads=h, n_kv_heads=kv, head_dim=hd, q_pos=pos, rope_theta=1e4, mode="train"
+    )
+    # prefill on first 8, decode 4
+    pre, cache = attention(
+        p, x[:, :8], n_heads=h, n_kv_heads=kv, head_dim=hd, q_pos=pos[:, :8],
+        rope_theta=1e4, mode="prefill", cache_len=16,
+    )
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(full[:, :8]), atol=1e-4)
+    for t in range(8, 12):
+        out, cache = attention(
+            p, x[:, t : t + 1], n_heads=h, n_kv_heads=kv, head_dim=hd,
+            q_pos=pos[:, t : t + 1], rope_theta=1e4, mode="decode", cache=cache,
+        )
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, t]), atol=1e-4)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Windowed decode with a ring cache == full attention with window mask."""
+    d_model, h, kv, hd, win = 32, 2, 1, 16, 6
+    key = jax.random.PRNGKey(3)
+    p = attn_init(key, d_model, h, kv, hd)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 20, d_model))
+    pos = jnp.broadcast_to(jnp.arange(20), (1, 20))
+    full, _ = attention(
+        p, x, n_heads=h, n_kv_heads=kv, head_dim=hd, q_pos=pos, rope_theta=1e4,
+        mode="train", window=win,
+    )
+    _, cache = attention(
+        p, x[:, :10], n_heads=h, n_kv_heads=kv, head_dim=hd, q_pos=pos[:, :10],
+        rope_theta=1e4, mode="prefill", cache_len=win, window=win,
+    )
+    assert cache["k"].shape[1] == win  # ring buffer is window-sized
+    for t in range(10, 20):
+        out, cache = attention(
+            p, x[:, t : t + 1], n_heads=h, n_kv_heads=kv, head_dim=hd,
+            q_pos=pos[:, t : t + 1], rope_theta=1e4, mode="decode", cache=cache, window=win,
+        )
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, t]), atol=1e-4)
+
+
+def test_cross_attention_prefill_cache_reused_at_decode():
+    d_model, h, kv, hd = 32, 4, 4, 8
+    key = jax.random.PRNGKey(4)
+    p = attn_init(key, d_model, h, kv, hd)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 4, d_model))
+    mem = jax.random.normal(jax.random.fold_in(key, 2), (2, 9, d_model))
+    pos = jnp.broadcast_to(jnp.arange(4), (2, 4))
+    out_full, cache = attention(
+        p, x, n_heads=h, n_kv_heads=kv, head_dim=hd, q_pos=pos, memory=mem, mode="prefill"
+    )
+    # at decode the model passes the memory from cache["memory"]; the cached
+    # cross k/v must be used (not recomputed) — verified by perturbing mem
+    out_dec, _ = attention(
+        p, x[:, -1:], n_heads=h, n_kv_heads=kv, head_dim=hd, q_pos=pos[:, -1:],
+        memory=mem * 100.0, cache=cache, mode="decode",
+    )
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]), np.asarray(out_full[:, -1]), atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 8, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    r = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(r), axis=-1), np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5
+    )
+    # dot products depend only on relative offsets
+    q = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(7), (1, 1, 1, 16))
+    def dot_at(pq, pk):
+        qq = apply_rope(q, jnp.full((1, 1), pq), 1e4)
+        kk = apply_rope(k, jnp.full((1, 1), pk), 1e4)
+        return float(jnp.sum(qq * kk))
+    assert dot_at(5, 3) == pytest.approx(dot_at(9, 7), rel=1e-4)
+
+
+def test_norms():
+    p = norm_init(None, 8, "rmsnorm")
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 8)) * 3
+    y = apply_norm(p, x, "rmsnorm")
+    ms = np.mean(np.asarray(y) ** 2, -1)
+    np.testing.assert_allclose(ms, 1.0, rtol=1e-3)
+    p2 = norm_init(None, 8, "layernorm")
+    y2 = apply_norm(p2, x, "layernorm")
+    np.testing.assert_allclose(np.mean(np.asarray(y2), -1), 0.0, atol=1e-5)

@@ -1,0 +1,187 @@
+"""Baseline + VR optimizer unit tests.
+
+The critical contract: with gamma=1 every VR optimizer is EXACTLY its base
+optimizer (clip floor == ceiling -> r == 1), paper §7.3 ("VR-SGD is reduced
+to SGD").
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.core import GradStats, grad_stats, make_optimizer
+
+_tm = jax.tree_util.tree_map
+
+
+def random_tree(key, scale=0.1):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "dense": {"w": jax.random.normal(k1, (8, 4)) * scale, "b": jax.random.normal(k2, (4,)) * scale},
+        "out": jax.random.normal(k3, (4, 2)) * scale,
+    }
+
+
+def make_stats(key, params, noise=0.3):
+    g = random_tree(key)
+    n = random_tree(jax.random.fold_in(key, 1), scale=noise)
+    sq = _tm(lambda g_, n_: jnp.square(g_) + jnp.square(n_), g, n)
+    return GradStats(mean=g, sq_mean=sq, k=8)
+
+
+def run_steps(opt, params, stats, n=3):
+    state = opt.init(params)
+    for _ in range(n):
+        upd, state = opt.update(stats.mean, state, params, stats=stats)
+        params = _tm(jnp.add, params, upd)
+    return params
+
+
+BASE_VR_PAIRS = [
+    ("sgd", "vr_sgd"),
+    ("momentum", "vr_momentum"),
+    ("adam", "vr_adam"),
+    ("lars", "vr_lars"),
+    ("lamb", "vr_lamb"),
+]
+
+
+@pytest.mark.parametrize("base,vr", BASE_VR_PAIRS)
+def test_gamma_one_reduces_to_base(base, vr):
+    key = jax.random.PRNGKey(0)
+    params = random_tree(key)
+    stats = make_stats(jax.random.fold_in(key, 7), params)
+    mk = lambda name, gamma: make_optimizer(
+        OptimizerConfig(name=name, lr=0.01, schedule="constant", gamma=gamma, weight_decay=0.0)
+    )
+    p_base = run_steps(mk(base, 0.1), params, stats)
+    p_vr = run_steps(mk(vr, 1.0), params, stats)
+    for a, b in zip(jax.tree_util.tree_leaves(p_base), jax.tree_util.tree_leaves(p_vr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("base,vr", BASE_VR_PAIRS)
+def test_vr_differs_at_small_gamma(base, vr):
+    key = jax.random.PRNGKey(1)
+    params = random_tree(key)
+    stats = make_stats(jax.random.fold_in(key, 3), params, noise=1.0)
+    mk = lambda name: make_optimizer(
+        OptimizerConfig(name=name, lr=0.01, schedule="constant", gamma=0.1, weight_decay=0.0)
+    )
+    p_base = run_steps(mk(base), params, stats)
+    p_vr = run_steps(mk(vr), params, stats)
+    diffs = [
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree_util.tree_leaves(p_base), jax.tree_util.tree_leaves(p_vr))
+    ]
+    assert max(diffs) > 1e-6
+
+
+def test_vr_sgd_matches_paper_algorithm_manually():
+    """Line-by-line check of Algorithm 1 on a single tensor."""
+    g = jnp.array([1.0, 0.1, -0.5])
+    sq = jnp.array([1.1, 2.0, 0.3])
+    stats = GradStats(mean={"w": g}, sq_mean={"w": sq}, k=8)
+    var = sq - g**2
+    r = g**2 / (var + 1e-12)
+    r = r / jnp.mean(r)
+    r = jnp.clip(r, 0.1, 1.0)
+    expected = -0.05 * r * g
+    opt = make_optimizer(OptimizerConfig(name="vr_sgd", lr=0.05, schedule="constant", gamma=0.1))
+    upd, _ = opt.update({"w": g}, opt.init({"w": g}), {"w": g}, stats=stats)
+    np.testing.assert_allclose(np.asarray(upd["w"]), np.asarray(expected), rtol=1e-5)
+
+
+def test_vr_adam_gsnr_momentum_bias_correction():
+    """Alg. 3: p_1 = (1-b3)*r, phat_1 = r -> ghat_1 = r*g exactly at t=1."""
+    g = jnp.array([0.5, -0.2])
+    sq = jnp.array([0.5, 0.2])
+    stats = GradStats(mean={"w": g}, sq_mean={"w": sq}, k=8)
+    from repro.core.gsnr import gsnr_scale
+
+    r = gsnr_scale(stats, 0.1)["w"]
+    opt = make_optimizer(
+        OptimizerConfig(name="vr_adam", lr=1.0, schedule="constant", gamma=0.1, weight_decay=0.0)
+    )
+    state = opt.init({"w": g})
+    upd, state2 = opt.update({"w": g}, state, {"w": g}, stats=stats)
+    ghat = r * g
+    # after bias correction at t=1, mhat = ghat, vhat = ghat^2
+    expected = -(ghat / (jnp.abs(ghat) + 1e-8))
+    np.testing.assert_allclose(np.asarray(upd["w"]), np.asarray(expected), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state2["p"]["w"]), np.asarray(0.1 * r), rtol=1e-5)
+
+
+def test_adam_converges_quadratic():
+    opt = make_optimizer(
+        OptimizerConfig(name="adam", lr=0.1, schedule="constant", weight_decay=0.0)
+    )
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(300):
+        g = {"w": 2 * params["w"]}
+        upd, state = opt.update(g, state, params)
+        params = _tm(jnp.add, params, upd)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_lamb_trust_ratio_scales_per_tensor():
+    """A tensor with huge gradient norm gets its update clamped by ||theta||."""
+    opt = make_optimizer(
+        OptimizerConfig(name="lamb", lr=0.1, schedule="constant", weight_decay=0.0)
+    )
+    params = {"small": jnp.full((4,), 0.01), "big": jnp.full((4,), 5.0)}
+    g = {"small": jnp.full((4,), 100.0), "big": jnp.full((4,), 100.0)}
+    state = opt.init(params)
+    upd, _ = opt.update(g, state, params)
+    # update magnitude proportional to param norm (phi(||theta||))
+    ratio = float(jnp.linalg.norm(upd["big"]) / jnp.linalg.norm(upd["small"]))
+    assert ratio == pytest.approx(
+        float(min(jnp.linalg.norm(params["big"]), 10.0) / jnp.linalg.norm(params["small"])),
+        rel=1e-3,
+    )
+
+
+def test_lars_momentum_accumulates():
+    opt = make_optimizer(
+        OptimizerConfig(name="lars", lr=0.1, schedule="constant", weight_decay=0.0)
+    )
+    params = {"w": jnp.ones((4,))}
+    g = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    upd1, state = opt.update(g, state, params)
+    upd2, state = opt.update(g, state, params)
+    assert float(jnp.linalg.norm(upd2["w"])) > float(jnp.linalg.norm(upd1["w"]))
+
+
+def test_schedule_warmup_and_decay():
+    from repro.core import make_schedule
+
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule="cosine")
+    fn = make_schedule(cfg)
+    assert float(fn(0)) == pytest.approx(0.1)
+    assert float(fn(9)) == pytest.approx(1.0)
+    assert float(fn(99)) < 0.01
+    lin = make_schedule(OptimizerConfig(lr=1.0, warmup_steps=1, total_steps=101, schedule="linear"))
+    assert float(lin(51)) == pytest.approx(0.5, abs=0.02)
+
+
+def test_sqrt_scaling_rule():
+    from repro.core import sqrt_scaled_lr
+
+    assert sqrt_scaled_lr(0.1, 4096, 1024) == pytest.approx(0.2)
+
+
+def test_bf16_state_storage_close_to_f32():
+    """bf16 moment storage tracks the f32 path (math stays f32)."""
+    key = jax.random.PRNGKey(2)
+    params = random_tree(key)
+    stats = make_stats(jax.random.fold_in(key, 5), params)
+    mk = lambda sd: make_optimizer(
+        OptimizerConfig(name="vr_lamb", lr=0.01, schedule="constant", state_dtype=sd)
+    )
+    p32 = run_steps(mk("float32"), params, stats, n=5)
+    p16 = run_steps(mk("bfloat16"), params, stats, n=5)
+    for a, b in zip(jax.tree_util.tree_leaves(p32), jax.tree_util.tree_leaves(p16)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-2)

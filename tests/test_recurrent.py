@@ -1,0 +1,40 @@
+"""RG-LRU block: parallel scan == sequential recurrence; decode continuation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.recurrent import apply_rglru, rglru_init
+
+
+def test_associative_scan_matches_sequential():
+    d = 16
+    key = jax.random.PRNGKey(0)
+    p = rglru_init(key, d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 24, d)) * 0.5
+    out_par, _ = apply_rglru(p, x, mode="train")
+    # sequential: run decode mode over the full sequence (step-by-step scan)
+    out_seq, _ = apply_rglru(p, x, cache={"h": jnp.zeros((2, d)), "conv": jnp.zeros((2, 3, d))},
+                             mode="decode")
+    np.testing.assert_allclose(np.asarray(out_par), np.asarray(out_seq), atol=1e-4)
+
+
+def test_prefill_then_decode_continues_state():
+    d = 16
+    key = jax.random.PRNGKey(1)
+    p = rglru_init(key, d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 20, d)) * 0.5
+    full, _ = apply_rglru(p, x, mode="train")
+    _, cache = apply_rglru(p, x[:, :12], mode="prefill")
+    for t in range(12, 20):
+        out, cache = apply_rglru(p, x[:, t : t + 1], cache=cache, mode="decode")
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, t]), atol=1e-4)
+
+
+def test_decay_bounds():
+    """a_t in (0, 1): the recurrence is a contraction (long-context stable)."""
+    d = 8
+    p = rglru_init(jax.random.PRNGKey(2), d)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 200, d)) * 2.0
+    out, cache = apply_rglru(p, x, mode="prefill")
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert np.all(np.isfinite(np.asarray(cache["h"])))

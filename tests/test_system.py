@@ -1,0 +1,61 @@
+"""End-to-end system behaviour: train -> checkpoint -> restore -> serve, and
+the paper's headline mechanism (VRGD stabilizes large-batch training where
+the base optimizer degrades) at miniature scale."""
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.configs.base import OptimizerConfig
+from repro.data import linreg_data, lm_batches
+from repro.serve import Engine
+from repro.train import init_state, train_loop
+from repro.train.checkpoint import restore, save
+
+
+def test_train_checkpoint_serve_pipeline(tmp_path):
+    cfg = get_smoke("granite-3-2b").replace(global_batch=8, seq_len=24)
+    stream = lm_batches(cfg.model.vocab_size, 8, 24, seed=0)
+    state, hist = train_loop(cfg, stream, steps=6, log_every=5)
+    path = os.path.join(tmp_path, "model.npz")
+    save(path, state)
+    restored = restore(path, init_state(cfg))
+    eng = Engine(cfg, restored.params, cache_len=48)
+    prompts = np.random.RandomState(0).randint(0, cfg.model.vocab_size, size=(2, 8))
+    res = eng.generate(prompts, 8)
+    assert res.tokens.shape == (2, 8)
+
+
+def test_vrgd_beats_sgd_on_noisy_ill_conditioned_regression():
+    """Paper §7.2 mechanism: with anisotropic features + label noise at an
+    aggressive LR, VR-SGD's element-wise damping keeps the noisy coordinates
+    stable while SGD oscillates — final test loss no worse (usually better)."""
+    import jax.numpy as jnp
+
+    from repro.core import grad_stats, make_optimizer
+
+    x, y = linreg_data(2048, seed=0, noise=1.0, anisotropy=0.7)
+    xt, yt = linreg_data(2048, seed=9, anisotropy=0.7)
+    x, y, xt, yt = map(jnp.asarray, (x, y, xt, yt))
+
+    def loss_fn(params, batch):
+        bx, by = batch
+        return jnp.mean((bx @ params["w"] - by) ** 2)
+
+    final = {}
+    for name in ("sgd", "vr_sgd"):
+        # linear warm-up over the run (paper's protocol); SGD still diverges
+        # mid-ramp at this LR, VR-SGD's damping keeps it stable
+        opt = make_optimizer(
+            OptimizerConfig(name=name, lr=0.09, schedule="constant", warmup_steps=100, k=64)
+        )
+        params = {"w": jnp.zeros(10)}
+        state = opt.init(params)
+        for _ in range(100):
+            _, _, stats = grad_stats(loss_fn, params, (x, y), 64)
+            upd, state = opt.update(stats.mean, state, params, stats=stats)
+            params = jax.tree_util.tree_map(jnp.add, params, upd)
+        final[name] = float(loss_fn(params, (xt, yt)))
+    assert np.isfinite(final["vr_sgd"])
+    assert final["vr_sgd"] <= final["sgd"] * 1.05, final
