@@ -5,7 +5,10 @@ win on the update math.
   a) trainer overhead: base optimizer vs VR at equal k-microbatch structure
      (isolates the Σg² accumulation + GSNR pipeline cost),
   b) update-math microbench: jnp GSNR pipeline vs fused Pallas kernel
-     (interpret mode on CPU — structural check; wall-clock wins are TPU).
+     (interpret mode on CPU — structural check; wall-clock wins are TPU),
+  c) accumulation microbench: the paper scan body's two jnp moment tree
+     passes vs the fused Pallas sweep (kernels/grad_stats.py), end to end
+     through grad_stats(use_pallas=True), reporting the fused/unfused delta.
 """
 from __future__ import annotations
 
@@ -73,10 +76,52 @@ def update_math(fast: bool) -> None:
     emit("update_math_pallas_interpret", dt_k * 1e6, f"n={n};note=CPU-interpret")
 
 
+def accumulation(fast: bool) -> None:
+    """Fused vs unfused k-group moment accumulation (the scan-body Σg/Σg²).
+
+    Runs the same grad_stats call both ways so the delta isolates the
+    accumulation sweeps.  Interpret mode on CPU: the absolute Pallas number
+    carries interpreter overhead — the structural check is that the fused
+    path produces identical statistics in a single sweep per leaf (the
+    HBM-pass win is a TPU measurement).
+    """
+    from repro.core import grad_stats
+
+    n = 1 << 12 if fast else 1 << 14
+    k = 8
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (32, n))
+    Y = X @ jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    params = {"w": jnp.zeros((n,)), "b": jnp.zeros(())}
+
+    def loss_fn(p, b):
+        x, y = b
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    times = {}
+    for pallas in (False, True):
+        fn = jax.jit(
+            lambda p, b, up=pallas: grad_stats(loss_fn, p, b, k, use_pallas=up)[2]
+        )
+        dt, stats = timed(fn, params, (X, Y), iters=4)
+        times[pallas] = dt
+        emit(
+            f"accum_{'fused' if pallas else 'unfused'}",
+            dt * 1e6,
+            f"n={n};k={k}" + (";note=CPU-interpret" if pallas else ""),
+        )
+    emit(
+        "accum_fused_ratio",
+        0.0,
+        f"fused/unfused={times[True]/times[False]:.3f} (TPU is the real number)",
+    )
+
+
 def main(fast: bool = False) -> None:
     t0 = time.time()
     trainer_overhead(fast)
     update_math(fast)
+    accumulation(fast)
     print(f"# bench_overhead done in {time.time()-t0:.1f}s")
 
 

@@ -44,6 +44,7 @@ def grad_stats(
     has_aux: bool = False,
     method: str = "scan",
     squares: bool = True,
+    use_pallas: bool = False,
 ) -> Tuple[jnp.ndarray, Any, GradStats]:
     """Accumulate (mean loss, aux, GradStats) over k microbatches.
 
@@ -59,6 +60,12 @@ def grad_stats(
     bytes) at the cost of a transient (k, param)-shaped gradient stack.
     Right choice for <= ~20B-param models; scan remains the default for
     memory-critical giants.
+
+    use_pallas (scan + squares only): the scan body's two moment tree-passes
+    (g_sum += g; g2_sum += g²) run as ONE fused Pallas sweep per leaf
+    (kernels/grad_stats.py); the carry lives in the kernel's padded layout
+    for the whole scan and the terminal /k normalize is fused with the
+    unpad.  Statistics are identical to the jnp path (oracle-tested).
     """
     mb = split_batch(batch, k)
     if method == "vmap":
@@ -74,36 +81,52 @@ def grad_stats(
         aux_out = _tm(lambda x: jnp.mean(x, axis=0), aux) if has_aux else None
         return jnp.mean(loss), aux_out, stats
     gfn = jax.value_and_grad(loss_fn, has_aux=has_aux)
+    fused = use_pallas and squares  # stale steps (no Σg²) are a single add: jnp
+    if fused:
+        from repro.kernels import ops as kops
 
     def step(carry, microbatch):
         loss_sum, aux_sum, g_sum = carry[:3]
         out, g = gfn(params, microbatch)
         loss, aux = out if has_aux else (out, aux_sum)
         g = _tm(lambda x: x.astype(jnp.float32), g)
+        aux_new = _tm(jnp.add, aux_sum, aux) if has_aux else aux_sum
+        if fused:
+            g_sum, g2_sum = kops.moments_accum_tree(g_sum, carry[3], g)
+            return (loss_sum + loss, aux_new, g_sum, g2_sum), None
         g_sum = _tm(jnp.add, g_sum, g)
-        new = (loss_sum + loss, _tm(jnp.add, aux_sum, aux) if has_aux else aux_sum, g_sum)
+        new = (loss_sum + loss, aux_new, g_sum)
         if squares:  # amortized-GSNR stale steps skip the Σg² tree entirely
             new += (_tm(lambda a, x: a + jnp.square(x), carry[3], g),)
         return new, None
 
-    zeros = _tm(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     aux0 = None
     if has_aux:
         # probe aux structure abstractly (zeros of the right shapes)
         aux_shape = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params, _tm(lambda x: x[0], mb))
         aux0 = _tm(lambda s: jnp.zeros(s.shape, s.dtype), aux_shape)
-    carry0 = (jnp.zeros((), jnp.float32), aux0, zeros)
-    if squares:
-        carry0 += (_tm(jnp.zeros_like, zeros),)
+    if fused:
+        g0, g20 = kops.moments_init_tree(params)
+        carry0 = (jnp.zeros((), jnp.float32), aux0, g0, g20)
+    else:
+        zeros = _tm(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        carry0 = (jnp.zeros((), jnp.float32), aux0, zeros)
+        if squares:
+            carry0 += (_tm(jnp.zeros_like, zeros),)
     out_carry, _ = jax.lax.scan(step, carry0, mb)
-    loss_sum, aux_sum, g_sum = out_carry[:3]
-    g2_sum = out_carry[3] if squares else None
+    loss_sum, aux_sum = out_carry[:2]
     inv = 1.0 / k
-    stats = GradStats(
-        mean=_tm(lambda x: x * inv, g_sum),
-        sq_mean=_tm(lambda x: x * inv, g2_sum) if squares else None,
-        k=k,
-    )
+    if fused:
+        mean, sq_mean = kops.moments_finalize_tree(out_carry[2], out_carry[3], params, k)
+        stats = GradStats(mean=mean, sq_mean=sq_mean, k=k)
+    else:
+        g_sum = out_carry[2]
+        g2_sum = out_carry[3] if squares else None
+        stats = GradStats(
+            mean=_tm(lambda x: x * inv, g_sum),
+            sq_mean=_tm(lambda x: x * inv, g2_sum) if squares else None,
+            k=k,
+        )
     aux_out = _tm(lambda x: x * inv, aux_sum) if has_aux else None
     return loss_sum * inv, aux_out, stats
 

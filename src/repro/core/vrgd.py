@@ -48,7 +48,7 @@ def _scaled_grads(grads, stats, gamma, eps, use_pallas=False):
     if use_pallas:
         from repro.kernels import ops as kops
 
-        return kops.vr_scale_tree(stats, gamma, eps)
+        return kops.vr_scale_tree(stats, grads, gamma, eps)
     r = gsnr_scale(stats, gamma, eps)
     return _tm(lambda r_, g: r_ * g, r, grads), r
 
@@ -142,7 +142,8 @@ def vr_adam(
             from repro.kernels import ops as kops
 
             return kops.vr_adam_update(
-                grads, state, _require(stats), lr, b1, b2, b3, eps, wd, gamma, gsnr_eps, params
+                grads, state, _require(stats), lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
+                params, state_dtype,
             )
         d, new_state = _vr_adam_dir(
             grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
@@ -167,7 +168,14 @@ def vr_lars(
     base = B.lars(lr_fn, mu=mu, wd=wd, trust=trust)
 
     def update(grads, state, params, stats=None):
-        sg, _r = _scaled_grads(grads, stats, gamma, eps, use_pallas)
+        if use_pallas:
+            from repro.kernels import ops as kops
+
+            return kops.vr_lars_update(
+                grads, state, _require(stats), lr_fn(state["step"]), mu, wd, trust,
+                gamma, eps, params,
+            )
+        sg, _r = _scaled_grads(grads, stats, gamma, eps, False)
         return base.update(sg, state, params)
 
     return B.Transform(base.init, update)
@@ -193,6 +201,13 @@ def vr_lamb(
 
     def update(grads, state, params, stats=None):
         lr = lr_fn(state["step"])
+        if use_pallas and stats is not None:
+            from repro.kernels import ops as kops
+
+            return kops.vr_lamb_update(
+                grads, state, _require(stats), lr, b1, b2, b3, eps, wd, gamma,
+                gsnr_eps, params, state_dtype,
+            )
         d, new_state = _vr_adam_dir(
             grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
         )
@@ -232,7 +247,9 @@ def make_optimizer(cfg, use_pallas: bool = False) -> B.Transform:
             lr_fn, cfg.b1, cfg.b2, cfg.b3, cfg.eps, cfg.weight_decay, g, ge, use_pallas,
             cfg.state_dtype,
         ),
-        "vr_lars": lambda: vr_lars(lr_fn, cfg.momentum, cfg.weight_decay, gamma=g, eps=ge),
+        "vr_lars": lambda: vr_lars(
+            lr_fn, cfg.momentum, cfg.weight_decay, gamma=g, eps=ge, use_pallas=use_pallas
+        ),
         "vr_lamb": lambda: vr_lamb(
             lr_fn, cfg.b1, cfg.b2, cfg.b3, cfg.eps, cfg.weight_decay, g, ge, use_pallas,
             cfg.state_dtype,

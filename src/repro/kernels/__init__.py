@@ -1,5 +1,8 @@
-# Pallas TPU kernels (interpret-mode validated on CPU):
-#   vr_update.vr_scale        — fused GSNR pipeline (VR-SGD/Momentum/LARS)
-#   vr_adam.vr_adam_inner     — fused VR-Adam/LAMB inner step
-#   flash_attention           — causal/sliding-window online-softmax attention
+# Pallas TPU kernels (interpret-mode validated on CPU by tests/oracle.py):
+#   vr_update.vr_scale          — fused GSNR pipeline (VR-SGD/Momentum)
+#   vr_adam.vr_adam_inner       — fused VR-Adam inner step
+#   vr_lamb.vr_lamb_inner       — fused VR-LAMB step + trust-ratio norm partials
+#   vr_lamb.vr_lars_inner       — fused VR-LARS scale + trust-ratio norm partials
+#   grad_stats.moments_*        — fused k-group moment accumulation (scan body)
+#   flash_attention             — causal/sliding-window online-softmax attention
 # ops.py holds the jit'd dispatch wrappers; ref.py the pure-jnp oracles.

@@ -1,6 +1,19 @@
 """Jit'd wrappers integrating the Pallas kernels into the optimizer/model
 stacks, with backend dispatch: real Mosaic lowering on TPU, interpret mode
-elsewhere (so CPU tests execute the same kernel bodies)."""
+elsewhere (so CPU tests execute the same kernel bodies).
+
+Every wrapper here is required to be bit-for-bit interchangeable (up to f32
+rounding) with the jnp path in core/vrgd.py / core/accumulate.py — the
+differential oracle harness (tests/oracle.py) enforces it.  Two conventions
+keep the paths aligned:
+
+  * the GSNR ratio derives from the raw group moments (stats.mean, sq_mean)
+    but multiplies the gradient actually entering the update (the ``grads``
+    argument, which global grad-clip may have rescaled);
+  * optimizer moments are stored in ``state_dtype`` (math always f32), and
+    the GSNR-momentum bias correction uses the stats-step counter ``pt``,
+    not the raw step — they differ under amortized (stale) GSNR refresh.
+"""
 from __future__ import annotations
 
 from typing import Any, Tuple
@@ -10,7 +23,9 @@ import jax.numpy as jnp
 
 from repro.core.gsnr import GradStats
 from repro.kernels import flash_attention as fa
+from repro.kernels import grad_stats as gsk
 from repro.kernels import vr_adam as va
+from repro.kernels import vr_lamb as vl
 from repro.kernels import vr_update as vu
 
 _tm = jax.tree_util.tree_map
@@ -20,53 +35,169 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def vr_scale_tree(stats: GradStats, gamma: float, eps: float) -> Tuple[Any, Any]:
-    """Fused (scaled_grads, r) across a pytree (kernel per leaf)."""
+def _leaves(treedef, *trees):
+    return [treedef.flatten_up_to(t) for t in trees]
+
+
+def _map_unzip(fn, ref_tree, *rest_trees):
+    """Map ``fn`` (returning an (a, b) tuple per leaf) over trees; return the
+    two result trees.  The split is anchored to ref_tree's treedef — an
+    is_leaf-on-2-tuples heuristic would misfire when the param pytree itself
+    contains tuple nodes."""
+    leaves, treedef = jax.tree_util.tree_flatten(ref_tree)
+    rests = [treedef.flatten_up_to(t) for t in rest_trees]
+    outs = [fn(*args) for args in zip(leaves, *rests)]
+    return (
+        treedef.unflatten([o[0] for o in outs]),
+        treedef.unflatten([o[1] for o in outs]),
+    )
+
+
+def vr_scale_tree(stats: GradStats, grads, gamma: float, eps: float) -> Tuple[Any, Any]:
+    """Fused (scaled_grads, r) across a pytree (kernel per leaf).
+
+    r comes from the group moments; it scales ``grads`` (the possibly
+    grad-clipped gradient), matching the jnp path in vrgd._scaled_grads.
+    """
     interp = _interpret()
-    pairs = _tm(lambda g, g2: vu.vr_scale(g, g2, gamma, eps, interpret=interp),
-                stats.mean, stats.sq_mean)
-    sg = jax.tree_util.tree_map(
-        lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+    return _map_unzip(
+        lambda g, g2, ga: vu.vr_scale(g, g2, gamma, eps, interpret=interp, g_apply=ga),
+        stats.mean, stats.sq_mean, grads,
     )
-    r = jax.tree_util.tree_map(
-        lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
-    )
-    return sg, r
+
+
+def _bias_corrections(state, b1, b2, b3):
+    """(t, pt, bc1, bc2, bc3) exactly as vrgd._vr_adam_dir computes them on a
+    fresh-stats step: b1/b2 correct by the optimizer step, b3 by the
+    stats-refresh counter pt (they diverge under amortized GSNR)."""
+    t = state["step"] + 1
+    tf = t.astype(jnp.float32)
+    pt = state.get("pt", state["step"]) + 1
+    ptf = jnp.maximum(pt.astype(jnp.float32), 1.0)
+    return t, pt, 1 - b1**tf, 1 - b2**tf, 1 - b3**ptf
 
 
 def vr_adam_update(
-    grads, state, stats: GradStats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps, params
+    grads, state, stats: GradStats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
+    params, state_dtype: str = "float32",
 ):
     """Full VR-Adam update via the fused kernel; matches vrgd.vr_adam jnp path."""
     interp = _interpret()
-    t = state["step"] + 1
-    tf = t.astype(jnp.float32)
-    bc1, bc2, bc3 = 1 - b1**tf, 1 - b2**tf, 1 - b3**tf
+    t, pt, bc1, bc2, bc3 = _bias_corrections(state, b1, b2, b3)
+    sd = jnp.dtype(state_dtype)
 
-    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
-    leaves_g2 = treedef.flatten_up_to(stats.sq_mean)
-    leaves_m = treedef.flatten_up_to(state["m"])
-    leaves_v = treedef.flatten_up_to(state["v"])
-    leaves_p = treedef.flatten_up_to(state["p"])
+    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
+    leaves_ga, leaves_g2, leaves_m, leaves_v, leaves_p = _leaves(
+        treedef, grads, stats.sq_mean, state["m"], state["v"], state["p"]
+    )
     dirs, ms, vs, ps = [], [], [], []
-    for g, g2, m, v, p in zip(leaves_g, leaves_g2, leaves_m, leaves_v, leaves_p):
+    for g, ga, g2, m, v, p in zip(
+        leaves_g, leaves_ga, leaves_g2, leaves_m, leaves_v, leaves_p
+    ):
         d_, m_, v_, p_ = va.vr_adam_inner(
             g, g2, m, v, p, bc1, bc2, bc3,
             b1=b1, b2=b2, b3=b3, eps=eps, gamma=gamma, gsnr_eps=gsnr_eps,
-            interpret=interp,
+            interpret=interp, g_apply=ga,
         )
         dirs.append(d_)
-        ms.append(m_)
-        vs.append(v_)
-        ps.append(p_)
+        ms.append(m_.astype(sd))
+        vs.append(v_.astype(sd))
+        ps.append(p_.astype(sd))
     unf = treedef.unflatten
     d = unf(dirs)
     if wd and params is not None:
         d = _tm(lambda d_, p_: d_ + wd * p_, d, params)
     upd = _tm(lambda d_: -lr * d_, d)
-    new_state = {"step": t, "m": unf(ms), "v": unf(vs), "p": unf(ps),
-                 "pt": state.get("pt", state["step"]) + 1}
+    new_state = {"step": t, "m": unf(ms), "v": unf(vs), "p": unf(ps), "pt": pt}
     return upd, new_state
+
+
+def vr_lamb_update(
+    grads, state, stats: GradStats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
+    params, state_dtype: str = "float32",
+):
+    """Full VR-LAMB update via the fused kernel; matches vrgd.vr_lamb jnp path."""
+    from repro.core.baselines import _lamb_phi
+
+    interp = _interpret()
+    t, pt, bc1, bc2, bc3 = _bias_corrections(state, b1, b2, b3)
+    sd = jnp.dtype(state_dtype)
+
+    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
+    leaves_ga, leaves_g2, leaves_m, leaves_v, leaves_p, leaves_w = _leaves(
+        treedef, grads, stats.sq_mean, state["m"], state["v"], state["p"], params
+    )
+    upds, ms, vs, ps = [], [], [], []
+    for g, ga, g2, m, v, p, w in zip(
+        leaves_g, leaves_ga, leaves_g2, leaves_m, leaves_v, leaves_p, leaves_w
+    ):
+        u, m_, v_, p_, u2, w2 = vl.vr_lamb_inner(
+            g, ga, g2, m, v, p, w, bc1, bc2, bc3,
+            b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
+            interpret=interp,
+        )
+        pn, un = jnp.sqrt(w2), jnp.sqrt(u2)
+        ratio = jnp.where((pn > 0) & (un > 0), _lamb_phi(pn) / (un + 1e-12), 1.0)
+        upds.append(-lr * ratio * u)
+        ms.append(m_.astype(sd))
+        vs.append(v_.astype(sd))
+        ps.append(p_.astype(sd))
+    unf = treedef.unflatten
+    new_state = {"step": t, "m": unf(ms), "v": unf(vs), "p": unf(ps), "pt": pt}
+    return unf(upds), new_state
+
+
+def vr_lars_update(grads, state, stats: GradStats, lr, mu, wd, trust, gamma, eps, params):
+    """Full VR-LARS update via the fused kernel; matches vrgd.vr_lars jnp path
+    (vr_scale -> baselines.lars) leaf for leaf."""
+    interp = _interpret()
+    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
+    leaves_ga, leaves_g2, leaves_m, leaves_w = _leaves(
+        treedef, grads, stats.sq_mean, state["m"], params
+    )
+    ms = []
+    for g, ga, g2, m, w in zip(leaves_g, leaves_ga, leaves_g2, leaves_m, leaves_w):
+        u, u2, w2 = vl.vr_lars_inner(
+            g, ga, g2, w, wd=wd, gamma=gamma, eps=eps, interpret=interp
+        )
+        pn, gn = jnp.sqrt(w2), jnp.sqrt(u2)
+        ratio = jnp.where((pn > 0) & (gn > 0), trust * pn / (gn + 1e-12), 1.0)
+        ms.append(mu * m + ratio * u)
+    unf = treedef.unflatten
+    m_new = unf(ms)
+    upd = _tm(lambda m_: -lr * m_, m_new)
+    return upd, {"step": state["step"] + 1, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# k-group moment accumulation (core/accumulate.py scan body)
+# ---------------------------------------------------------------------------
+
+
+def moments_init_tree(params):
+    """Padded (rows x 128) zero carries (g_sum, g2_sum) for the scan."""
+    zeros = _tm(gsk.moments_init, params)
+    return zeros, _tm(jnp.zeros_like, zeros)
+
+
+def moments_accum_tree(g_sum, g2_sum, grads):
+    """One fused microbatch update of both moment carries."""
+    interp = _interpret()
+    return _map_unzip(
+        lambda gs, g2s, g: gsk.moments_accum(gs, g2s, g, interpret=interp),
+        g_sum, g2_sum, grads,
+    )
+
+
+def moments_finalize_tree(g_sum, g2_sum, params, k):
+    """Fused /k normalize, unpadded back to parameter shapes -> (mean, sq_mean)."""
+    interp = _interpret()
+    return _map_unzip(
+        lambda gs, g2s, ref: gsk.moments_finalize(
+            gs, g2s, k, tuple(ref.shape), interpret=interp
+        ),
+        g_sum, g2_sum, params,
+    )
 
 
 def flash_attention(qh, k, v, q_pos=None, k_pos=None, *, causal: bool = True, window: int = 0):

@@ -5,33 +5,76 @@ import jax
 import jax.numpy as jnp
 
 
-def vr_scale_ref(g: jnp.ndarray, g2: jnp.ndarray, gamma: float, eps: float):
+def vr_scale_ref(g: jnp.ndarray, g2: jnp.ndarray, gamma: float, eps: float, g_apply=None):
     """GSNR pipeline on one tensor: returns (scaled_grad, r_clipped).
 
-    var -> r -> normalize by mean(r) -> clip [gamma, 1] -> r * g.
+    var -> r -> normalize by mean(r) -> clip [gamma, 1] -> r * g_apply.
+    g_apply defaults to g; it differs when global grad-clip rescaled the
+    gradient entering the update (r always derives from the raw moments).
     """
+    ga = (g if g_apply is None else g_apply).astype(jnp.float32)
     g = g.astype(jnp.float32)
     var = jnp.maximum(g2.astype(jnp.float32) - jnp.square(g), 0.0)
     r = jnp.square(g) / (var + eps)
     r = r / jnp.maximum(jnp.mean(r), 1e-30)
     r = jnp.clip(r, gamma, 1.0)
-    return r * g, r
+    return r * ga, r
 
 
 def vr_adam_inner_ref(
-    g, g2, m, v, p, *, b1, b2, b3, eps, gamma, gsnr_eps, bc1, bc2, bc3
+    g, g2, m, v, p, *, b1, b2, b3, eps, gamma, gsnr_eps, bc1, bc2, bc3, g_apply=None
 ):
     """Fused VR-Adam inner step on one tensor (paper Alg. 3 lines 8-17).
 
     Returns (direction, m', v', p').  bcN = 1 - betaN**t.
     """
+    ga = (g if g_apply is None else g_apply).astype(jnp.float32)
+    m, v, p = (x.astype(jnp.float32) for x in (m, v, p))
     _, r = vr_scale_ref(g, g2, gamma, gsnr_eps)
     p_new = b3 * p + (1 - b3) * r
-    ghat = (p_new / bc3) * g
+    ghat = (p_new / bc3) * ga
     m_new = b1 * m + (1 - b1) * ghat
     v_new = b2 * v + (1 - b2) * jnp.square(ghat)
     direction = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     return direction, m_new, v_new, p_new
+
+
+def vr_lamb_inner_ref(
+    g, ga, g2, m, v, p, w, *, b1, b2, b3, eps, wd, gamma, gsnr_eps, bc1, bc2, bc3
+):
+    """Fused VR-LAMB step on one tensor (paper Alg. 5): the VR-Adam direction
+    plus the pre-trust-ratio update u = dir + wd*w and the exact norm sums.
+
+    Returns (u, m', v', p', sum(u²), sum(w²)).
+    """
+    direction, m_new, v_new, p_new = vr_adam_inner_ref(
+        g, g2, m, v, p, b1=b1, b2=b2, b3=b3, eps=eps, gamma=gamma,
+        gsnr_eps=gsnr_eps, bc1=bc1, bc2=bc2, bc3=bc3, g_apply=ga,
+    )
+    w = w.astype(jnp.float32)
+    u = direction + wd * w
+    return u, m_new, v_new, p_new, jnp.sum(u * u), jnp.sum(w * w)
+
+
+def vr_lars_inner_ref(g, ga, g2, w, *, wd, gamma, eps):
+    """Fused VR-LARS scale on one tensor (§4.2): u = r*ga + wd*w plus the
+    exact norm sums.  Returns (u, sum(u²), sum(w²))."""
+    sg, _ = vr_scale_ref(g, g2, gamma, eps, g_apply=ga)
+    w = w.astype(jnp.float32)
+    u = sg + wd * w
+    return u, jnp.sum(u * u), jnp.sum(w * w)
+
+
+def moments_accum_ref(g_sum, g2_sum, g):
+    """Scan-body moment update on one leaf: (g_sum + g, g2_sum + g²) in f32."""
+    g = g.astype(jnp.float32)
+    return g_sum + g, g2_sum + jnp.square(g)
+
+
+def moments_finalize_ref(g_sum, g2_sum, k):
+    """Terminal /k normalize of both accumulated moments."""
+    inv = 1.0 / jnp.asarray(k, jnp.float32)
+    return g_sum * inv, g2_sum * inv
 
 
 def attention_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):

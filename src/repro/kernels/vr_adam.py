@@ -21,11 +21,12 @@ from repro.kernels.vr_update import LANE, BLOCK_ROWS, _pad2d
 
 
 def _kernel(
-    g_ref, g2_ref, m_ref, v_ref, p_ref, scal_ref,
+    g_ref, ga_ref, g2_ref, m_ref, v_ref, p_ref, scal_ref,
     dir_ref, m_out, v_out, p_out,
     *, b1, b2, b3, eps, gamma, gsnr_eps,
 ):
     g = g_ref[...].astype(jnp.float32)
+    ga = ga_ref[...].astype(jnp.float32)
     g2 = g2_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
     v = v_ref[...].astype(jnp.float32)
@@ -38,7 +39,7 @@ def _kernel(
     var = jnp.maximum(g2 - g * g, 0.0)
     r = jnp.clip((g * g) / (var + gsnr_eps) * inv_mean, gamma, 1.0)
     p_new = b3 * p + (1.0 - b3) * r
-    ghat = (p_new / bc3) * g
+    ghat = (p_new / bc3) * ga
     m_new = b1 * m + (1.0 - b1) * ghat
     v_new = b2 * v + (1.0 - b2) * ghat * ghat
     direction = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
@@ -54,15 +55,18 @@ def _kernel(
 )
 def vr_adam_inner(
     g, g2, m, v, p, bc1, bc2, bc3,
-    *, b1, b2, b3, eps, gamma, gsnr_eps, interpret: bool = True,
+    *, b1, b2, b3, eps, gamma, gsnr_eps, interpret: bool = True, g_apply=None,
 ):
     """Fused inner step on one tensor; matches ref.vr_adam_inner_ref.
 
     bcN are traced scalars (1 - betaN**t). Returns (dir, m', v', p') f32.
+    ``g_apply`` is the gradient entering the moments (== g unless grad-clip
+    rescaled it); the GSNR ratio always derives from the raw moments (g, g2).
     """
+    ga = g if g_apply is None else g_apply
     shape = g.shape
     g2d, n = _pad2d(g)
-    tens = [g2d] + [_pad2d(t)[0] for t in (g2, m, v, p)]
+    tens = [g2d] + [_pad2d(t)[0] for t in (ga, g2, m, v, p)]
     gf = g.reshape(-1).astype(jnp.float32)
     g2f = g2.reshape(-1).astype(jnp.float32)
     var = jnp.maximum(g2f - gf * gf, 0.0)
@@ -79,7 +83,7 @@ def vr_adam_inner(
             _kernel, b1=b1, b2=b2, b3=b3, eps=eps, gamma=gamma, gsnr_eps=gsnr_eps
         ),
         grid=grid,
-        in_specs=[blk] * 5 + [pl.BlockSpec((1, 4), lambda i: (0, 0))],
+        in_specs=[blk] * 6 + [pl.BlockSpec((1, 4), lambda i: (0, 0))],
         out_specs=(blk,) * 4,
         out_shape=(sds,) * 4,
         interpret=interpret,

@@ -23,31 +23,49 @@ LANE = 128
 BLOCK_ROWS = 256  # (256, 128) f32 = 128 KiB per ref; ~0.5 MiB working set
 
 
-def _kernel(g_ref, g2_ref, scal_ref, sg_ref, r_ref, *, gamma: float, eps: float):
+def _kernel(g_ref, ga_ref, g2_ref, scal_ref, sg_ref, r_ref, *, gamma: float, eps: float):
     g = g_ref[...].astype(jnp.float32)
+    ga = ga_ref[...].astype(jnp.float32)
     g2 = g2_ref[...].astype(jnp.float32)
     inv_mean = scal_ref[0, 0]
     var = jnp.maximum(g2 - g * g, 0.0)
     r = (g * g) / (var + eps)
     r = jnp.clip(r * inv_mean, gamma, 1.0)
-    sg_ref[...] = (r * g).astype(sg_ref.dtype)
+    sg_ref[...] = (r * ga).astype(sg_ref.dtype)
     r_ref[...] = r.astype(r_ref.dtype)
+
+
+def padded_rows(n: int) -> int:
+    """Rows of the (rows x 128) f32 padded layout for an n-element leaf:
+    ceil(n / LANE) rounded up to the 8-row f32 sublane."""
+    rows = -(-n // LANE)
+    return -(-rows // 8) * 8
 
 
 def _pad2d(x: jnp.ndarray):
     n = x.size
-    cols = LANE
-    rows = -(-n // cols)
-    rows_p = -(-rows // 8) * 8
-    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, rows_p * cols - n))
-    return flat.reshape(rows_p, cols), n
+    rows_p = padded_rows(n)
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, rows_p * LANE - n))
+    return flat.reshape(rows_p, LANE), n
 
 
 @functools.partial(jax.jit, static_argnames=("gamma", "eps", "interpret"))
-def vr_scale(g: jnp.ndarray, g2: jnp.ndarray, gamma: float, eps: float, interpret: bool = True):
-    """Fused (scaled_grad, r) for one tensor; matches ref.vr_scale_ref."""
-    orig_shape, orig_dtype = g.shape, g.dtype
+def vr_scale(
+    g: jnp.ndarray, g2: jnp.ndarray, gamma: float, eps: float,
+    interpret: bool = True, g_apply: jnp.ndarray = None,
+):
+    """Fused (scaled_grad, r) for one tensor; matches ref.vr_scale_ref.
+
+    r always derives from the raw group moments (g, g2); it multiplies
+    ``g_apply`` (the gradient actually entering the update — differs from g
+    when global grad-clip rescaled it).  g_apply=None means g_apply == g.
+    Both outputs are f32 regardless of input dtype, matching the jnp oracle
+    (r is f32, so r * g promotes).
+    """
+    ga = g if g_apply is None else g_apply
+    orig_shape = ga.shape
     g2d, n = _pad2d(g)
+    ga2d, _ = _pad2d(ga)
     g22d, _ = _pad2d(g2)
     # scalar pass: mean of raw r over the *unpadded* elements
     gf = g.reshape(-1).astype(jnp.float32)
@@ -69,6 +87,7 @@ def vr_scale(g: jnp.ndarray, g2: jnp.ndarray, gamma: float, eps: float, interpre
         in_specs=[
             pl.BlockSpec((br, LANE), lambda i: (i, 0)),
             pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=(
@@ -77,7 +96,7 @@ def vr_scale(g: jnp.ndarray, g2: jnp.ndarray, gamma: float, eps: float, interpre
         ),
         out_shape=out_shape,
         interpret=interpret,
-    )(g2d, g22d, inv_mean)
-    sg = sg2d.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)
+    )(g2d, ga2d, g22d, inv_mean)
+    sg = sg2d.reshape(-1)[:n].reshape(orig_shape)
     r = r2d.reshape(-1)[:n].reshape(orig_shape)
     return sg, r

@@ -147,10 +147,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str, save_hlo:
         if overrides:
             cfg = overrides(cfg)
         if mesh_shape is not None:
+            from repro.launch.mesh import _make_mesh
+
             axes = ("pod", "data", "model")[-len(mesh_shape):]
-            mesh = jax.make_mesh(
-                mesh_shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_shape)
-            )
+            mesh = _make_mesh(mesh_shape, axes)
         else:
             mesh = make_production_mesh(multi_pod=multi_pod)
         with activate(mesh, **(rules_kw or {})) as rules:

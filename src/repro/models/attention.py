@@ -10,7 +10,9 @@ Three execution paths:
                  This is also the reference semantics for the Pallas kernel
                  in kernels/flash_attention.py.
   * kernel     — pl.pallas_call flash attention (TPU target); enabled via
-                 ParallelismConfig.use_pallas, falls back to chunked.
+                 ParallelismConfig.use_pallas for self-attention prefill
+                 (forward-only: the kernel has no VJP), falls back to chunked
+                 everywhere else — training always differentiates the jnp path.
 
 KV caches are position-explicit: each slot stores its absolute position
 (`kpos`, -1 = empty) so full caches and sliding-window ring buffers share one
@@ -213,7 +215,12 @@ def attention(
 
     qh = q.reshape(b, s, n_kv_heads, g, head_dim)
     naive_elems = s * k.shape[1]
-    if use_pallas and mode == "train" and not cross:
+    if use_pallas and mode == "prefill" and not cross and k.shape[1] == s:
+        # The Pallas flash kernel is forward-only (no VJP), so it serves the
+        # inference prefill — where q/k positions are the implicit arange the
+        # kernel assumes — while training keeps the differentiable chunked
+        # path (the train-time use_pallas win is the fused optimizer/stats
+        # kernels, which sit outside the autodiff graph).
         from repro.kernels import ops as kops
 
         out = kops.flash_attention(qh, k, v, q_pos, k_pos, causal=causal, window=window)

@@ -53,7 +53,7 @@ def make_train_step(
             else:
                 loss, aux, stats = grad_stats(
                     loss_fn, state.params, batch, opt_cfg.k, has_aux=True,
-                    method=opt_cfg.stats_method,
+                    method=opt_cfg.stats_method, use_pallas=cfg.parallel.use_pallas,
                 )
             grads = stats.mean
         elif is_vr:

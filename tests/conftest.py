@@ -7,5 +7,16 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def pin_jax_config():
+    """Pin the jax.config flags the differential oracles depend on, for every
+    test — a prior test (or an env var leaking in from the shell) flipping
+    x64 or the PRNG impl would silently change tolerances and random draws."""
+    jax.config.update("jax_enable_x64", False)
+    jax.config.update("jax_default_prng_impl", "threefry2x32")
+    yield

@@ -1,0 +1,191 @@
+"""Differential oracle harness for the Pallas kernel family.
+
+Every Pallas kernel in src/repro/kernels/ has a pure-jnp reference
+(kernels/ref.py for the per-tensor kernels, core/vrgd.py + core/accumulate.py
+for the full transforms).  This module is the shared machinery that sweeps
+kernel vs. reference over the hostile input grid the kernels must survive:
+
+  * shapes: scalar-ish, non-tile-aligned trailing dims, multi-block leaves,
+    and partial edge blocks (rows % BLOCK_ROWS != 0 — the case that poisons
+    in-kernel reductions if padding is mishandled);
+  * dtypes: f32 and bf16 gradients / optimizer state;
+  * gamma edge cases: gamma=1.0 must collapse every VR optimizer to its base
+    optimizer (clip floor == ceiling), gamma→0 leaves the ratio free;
+  * grad-clip divergence: the GSNR ratio derives from raw moments but scales
+    the clipped gradient (g_apply != g);
+  * stale-GSNR steps: amortized refresh where the Pallas path must agree
+    with the jnp path about the pt bias-correction counter.
+
+It is dependency-free on purpose: ``property_cases`` is a seeded loop, not a
+hypothesis strategy, so the suite collects and runs on a bare interpreter
+(hypothesis, if installed, is simply not needed).  All kernels execute in
+Pallas interpret mode on CPU — the same kernel bodies Mosaic lowers on TPU.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Shapes chosen against the (BLOCK_ROWS=256, LANE=128) tiling:
+#   7        sub-lane sliver (single partial row)
+#   (33, 5)  2-D leaf, non-tile-aligned trailing dim
+#   1000     several rows, ragged tail
+#   4096     exactly 32 aligned rows, single block
+#   (3,5,7)  3-D leaf, everything ragged
+#   40000    313 rows -> partial edge block at BLOCK_ROWS=256
+#   70000    547 rows -> 3 grid steps, partial edge block
+SHAPES: Tuple[Tuple[int, ...], ...] = (
+    (7,), (33, 5), (1000,), (4096,), (3, 5, 7), (40000,), (70000,)
+)
+GAMMAS: Tuple[float, ...] = (0.1, 0.5, 1.0)
+DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+def tol_for(dtype) -> dict:
+    """allclose tolerances: f32 kernels match to rounding; bf16 inputs lose
+    ~8 mantissa bits before the f32 math starts."""
+    if dtype == jnp.float32:
+        return dict(atol=2e-5, rtol=2e-4)
+    return dict(atol=3e-2, rtol=3e-2)
+
+
+def assert_trees_close(got, want, msg: str = "", **tol) -> None:
+    """allclose over matching pytrees/tuples, with leaf-indexed error messages."""
+    gl = jax.tree_util.tree_leaves(got)
+    wl = jax.tree_util.tree_leaves(want)
+    assert len(gl) == len(wl), f"{msg}: leaf count {len(gl)} != {len(wl)}"
+    for i, (a, b) in enumerate(zip(gl, wl)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            err_msg=f"{msg} [leaf {i}]", **tol,
+        )
+
+
+def gsnr_inputs(shape: Sequence[int], seed: int, dtype=jnp.float32, clip_scale=None):
+    """A coherent (g, g_apply, g2) triple: g2 >= g² so variance is sane.
+
+    clip_scale simulates global grad-clip: g_apply = clip_scale * g (the jnp
+    oracle path scales the applied gradient but derives r from raw moments).
+    """
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = (jax.random.normal(ks[0], tuple(shape)) * 0.2).astype(dtype)
+    g2 = (
+        jnp.square(g.astype(jnp.float32))
+        + jax.random.uniform(ks[1], tuple(shape)) * 0.05
+    ).astype(dtype)
+    ga = g if clip_scale is None else (g.astype(jnp.float32) * clip_scale).astype(dtype)
+    return g, ga, g2
+
+
+def opt_state_inputs(shape: Sequence[int], seed: int, state_dtype=jnp.float32):
+    """Random (m, v, p, w) optimizer-state leaves; v, p nonneg like real state."""
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1000), 4)
+    m = (jax.random.normal(ks[0], tuple(shape)) * 0.05).astype(state_dtype)
+    v = (jax.random.uniform(ks[1], tuple(shape)) * 0.01).astype(state_dtype)
+    p = jax.random.uniform(ks[2], tuple(shape)).astype(state_dtype)
+    w = jax.random.normal(ks[3], tuple(shape))
+    return m, v, p, w
+
+
+def property_cases(n: int, seed: int = 0) -> Iterable[dict]:
+    """Dependency-free replacement for a hypothesis strategy: n deterministic
+    random cases of (shape, gamma, clip_scale, dtype) drawn from a seeded rng."""
+    rng = np.random.RandomState(seed)
+    for i in range(n):
+        size = int(rng.randint(1, 3000))
+        yield {
+            "shape": (size,),
+            "gamma": float(rng.uniform(0.01, 1.0)),
+            "clip_scale": float(rng.uniform(0.2, 1.5)) if rng.rand() < 0.5 else None,
+            "dtype": jnp.float32 if rng.rand() < 0.8 else jnp.bfloat16,
+            "seed": int(rng.randint(0, 2**31)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Transform-level differential runner (make_optimizer jnp vs Pallas)
+# ---------------------------------------------------------------------------
+
+
+def run_transform_pair(
+    name: str,
+    steps: int = 3,
+    state_dtype: str = "float32",
+    gamma: float = 0.1,
+    clip_scale=None,
+    stale_every: int = 0,
+    lr: float = 0.01,
+    wd: float = 0.01,
+    seed: int = 0,
+):
+    """Step the jnp and Pallas variants of one optimizer in lockstep.
+
+    Returns (updates_jnp, updates_pallas, state_jnp, state_pallas) from the
+    final step.  stale_every=R feeds stats only every R-th step (amortized
+    GSNR); clip_scale scales the applied gradient away from stats.mean.
+    """
+    from repro.configs.base import OptimizerConfig
+    from repro.core import GradStats, make_optimizer
+
+    key = jax.random.PRNGKey(seed)
+    params = {
+        "w": jax.random.normal(key, (33, 7)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (5,)),
+    }
+    gmean = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    sq = jax.tree_util.tree_map(lambda x: jnp.square(x) + 1e-3, gmean)
+    stats = GradStats(mean=gmean, sq_mean=sq, k=8)
+    grads = (
+        gmean
+        if clip_scale is None
+        else jax.tree_util.tree_map(lambda x: x * clip_scale, gmean)
+    )
+    cfg = OptimizerConfig(
+        name=name, lr=lr, schedule="constant", weight_decay=wd,
+        gamma=gamma, state_dtype=state_dtype,
+    )
+    o_j = make_optimizer(cfg, use_pallas=False)
+    o_k = make_optimizer(cfg, use_pallas=True)
+    s_j, s_k = o_j.init(params), o_k.init(params)
+    u_j = u_k = None
+    for t in range(steps):
+        st = stats if (not stale_every or t % stale_every == 0) else None
+        u_j, s_j = o_j.update(grads, s_j, params, stats=st)
+        u_k, s_k = o_k.update(grads, s_k, params, stats=st)
+    return u_j, u_k, s_j, s_k
+
+
+def run_base_collapse(name: str, steps: int = 3, seed: int = 0):
+    """gamma=1.0 clips r to exactly 1: the VR optimizer (Pallas path) must
+    reproduce its base optimizer step for step count ``steps``.
+
+    Returns (updates_base, updates_vr_pallas)."""
+    from repro.configs.base import OptimizerConfig
+    from repro.core import GradStats, make_optimizer
+
+    base_name = name.replace("vr_", "")
+    key = jax.random.PRNGKey(seed)
+    params = {
+        "w": jax.random.normal(key, (33, 7)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (5,)),
+    }
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    sq = jax.tree_util.tree_map(lambda x: jnp.square(x) + 1e-3, grads)
+    stats = GradStats(mean=grads, sq_mean=sq, k=8)
+    # b3 momentum on a constant r=1 is bias-corrected back to exactly 1, so
+    # even VR-Adam/LAMB collapse (p̂ = 1 for every t).
+    cfg_v = OptimizerConfig(name=name, lr=0.01, schedule="constant",
+                            weight_decay=0.01, gamma=1.0)
+    cfg_b = OptimizerConfig(name=base_name, lr=0.01, schedule="constant",
+                            weight_decay=0.01)
+    o_b = make_optimizer(cfg_b)
+    o_v = make_optimizer(cfg_v, use_pallas=True)
+    s_b, s_v = o_b.init(params), o_v.init(params)
+    u_b = u_v = None
+    for _ in range(steps):
+        u_b, s_b = o_b.update(grads, s_b, params, stats=stats)
+        u_v, s_v = o_v.update(grads, s_v, params, stats=stats)
+    return u_b, u_v

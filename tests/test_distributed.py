@@ -14,7 +14,8 @@ SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import grad_stats, device_grad_stats_fn
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((8,), ("data",))
 key = jax.random.PRNGKey(0)
 X = jax.random.normal(key, (64, 10))
 W = jnp.arange(1.0, 11.0)

@@ -1,0 +1,237 @@
+"""Differential oracle sweeps: every Pallas kernel vs its jnp reference.
+
+Uses the tests/oracle.py harness (dependency-free property loops, interpret
+mode on CPU).  Covers the acceptance grid: non-tile-aligned shapes, partial
+edge blocks, f32/bf16 state, gamma=1.0 base-optimizer collapse, grad-clip
+divergence (g_apply != g), and stale-GSNR (amortized refresh) steps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import oracle
+from repro.kernels import ref
+from repro.kernels.grad_stats import moments_accum, moments_finalize, moments_init
+from repro.kernels.vr_adam import vr_adam_inner
+from repro.kernels.vr_lamb import vr_lamb_inner, vr_lars_inner
+from repro.kernels.vr_update import vr_scale
+
+ADAM_KW = dict(b1=0.9, b2=0.999, b3=0.9, eps=1e-8, gamma=0.1, gsnr_eps=1e-12)
+LAMB_KW = dict(b1=0.9, b2=0.999, b3=0.9, eps=1e-6, wd=0.01, gamma=0.1, gsnr_eps=1e-12)
+BC = dict(bc1=0.19, bc2=0.002, bc3=0.19)
+_f = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# per-tensor kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", oracle.SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", oracle.DTYPES, ids=("f32", "bf16"))
+def test_vr_scale_oracle(shape, dtype):
+    for gamma in oracle.GAMMAS:
+        for clip in (None, 0.37):
+            g, ga, g2 = oracle.gsnr_inputs(shape, seed=sum(shape), dtype=dtype,
+                                           clip_scale=clip)
+            got = vr_scale(g, g2, gamma, 1e-12, g_apply=ga)
+            want = ref.vr_scale_ref(g, g2, gamma, 1e-12, g_apply=ga)
+            oracle.assert_trees_close(
+                got, want, msg=f"vr_scale {shape} {dtype} gamma={gamma} clip={clip}",
+                **oracle.tol_for(dtype),
+            )
+            if gamma == 1.0:  # clip floor == ceiling: r must be exactly 1
+                np.testing.assert_allclose(np.asarray(got[1]), 1.0)
+
+
+@pytest.mark.parametrize("shape", oracle.SHAPES, ids=str)
+@pytest.mark.parametrize("state_dtype", oracle.DTYPES, ids=("f32", "bf16"))
+def test_vr_adam_inner_oracle(shape, state_dtype):
+    g, ga, g2 = oracle.gsnr_inputs(shape, seed=1, clip_scale=0.9)
+    m, v, p, _ = oracle.opt_state_inputs(shape, seed=2, state_dtype=state_dtype)
+    got = vr_adam_inner(g, g2, m, v, p, _f(0.19), _f(0.002), _f(0.19),
+                        g_apply=ga, **ADAM_KW)
+    want = ref.vr_adam_inner_ref(g, g2, m, v, p, g_apply=ga, **ADAM_KW, **BC)
+    oracle.assert_trees_close(
+        got, want, msg=f"vr_adam {shape} {state_dtype}", **oracle.tol_for(state_dtype)
+    )
+
+
+@pytest.mark.parametrize("shape", oracle.SHAPES, ids=str)
+def test_vr_lamb_inner_oracle(shape):
+    """Includes the partial-edge-block shapes (40000, 70000): the in-kernel
+    norm reduction must see exact zeros in the padded tail, not garbage."""
+    g, ga, g2 = oracle.gsnr_inputs(shape, seed=3, clip_scale=0.8)
+    m, v, p, w = oracle.opt_state_inputs(shape, seed=4)
+    got = vr_lamb_inner(g, ga, g2, m, v, p, w, _f(0.19), _f(0.002), _f(0.19), **LAMB_KW)
+    want = ref.vr_lamb_inner_ref(g, ga, g2, m, v, p, w, **LAMB_KW, **BC)
+    oracle.assert_trees_close(got, want, msg=f"vr_lamb {shape}", atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("shape", oracle.SHAPES, ids=str)
+def test_vr_lars_inner_oracle(shape):
+    g, ga, g2 = oracle.gsnr_inputs(shape, seed=5, clip_scale=0.6)
+    _, _, _, w = oracle.opt_state_inputs(shape, seed=6)
+    got = vr_lars_inner(g, ga, g2, w, wd=1e-4, gamma=0.1, eps=1e-12)
+    want = ref.vr_lars_inner_ref(g, ga, g2, w, wd=1e-4, gamma=0.1, eps=1e-12)
+    oracle.assert_trees_close(got, want, msg=f"vr_lars {shape}", atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("shape", oracle.SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", oracle.DTYPES, ids=("f32", "bf16"))
+def test_grad_stats_moments_oracle(shape, dtype):
+    """k fused accumulation steps + fused /k finalize == the jnp scan body."""
+    k = 4
+    gs2d = moments_init(jnp.zeros(shape))
+    g2s2d = jnp.zeros_like(gs2d)
+    gs_ref = jnp.zeros(shape, jnp.float32)
+    g2s_ref = jnp.zeros_like(gs_ref)
+    for i in range(k):
+        g, _, _ = oracle.gsnr_inputs(shape, seed=100 + i, dtype=dtype)
+        gs2d, g2s2d = moments_accum(gs2d, g2s2d, g)
+        gs_ref, g2s_ref = ref.moments_accum_ref(gs_ref, g2s_ref, g)
+    got = moments_finalize(gs2d, g2s2d, k, tuple(shape))
+    want = ref.moments_finalize_ref(gs_ref, g2s_ref, k)
+    oracle.assert_trees_close(
+        got, want, msg=f"moments {shape} {dtype}", **oracle.tol_for(dtype)
+    )
+
+
+def test_vr_scale_property_loop():
+    """Seeded random grid (the hypothesis-free property sweep): r bounded in
+    [gamma, 1] and sg == r * g_apply for arbitrary shapes/gammas/clips."""
+    for case in oracle.property_cases(25, seed=7):
+        g, ga, g2 = oracle.gsnr_inputs(
+            case["shape"], case["seed"], case["dtype"], case["clip_scale"]
+        )
+        sg, r = vr_scale(g, g2, case["gamma"], 1e-12, g_apply=ga)
+        r_np = np.asarray(r)
+        assert np.all(r_np >= case["gamma"] - 1e-5), case
+        assert np.all(r_np <= 1 + 1e-5), case
+        np.testing.assert_allclose(
+            np.asarray(sg, np.float32),
+            np.asarray(r * ga.astype(jnp.float32), np.float32),
+            atol=3e-2 if case["dtype"] == jnp.bfloat16 else 1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# transform level: make_optimizer(use_pallas=True) vs the jnp oracle path
+# ---------------------------------------------------------------------------
+
+VR_NAMES = ("vr_sgd", "vr_momentum", "vr_adam", "vr_lars", "vr_lamb")
+
+
+@pytest.mark.parametrize("name", VR_NAMES)
+def test_transform_pallas_matches_jnp(name):
+    u_j, u_k, s_j, s_k = oracle.run_transform_pair(name, steps=3, clip_scale=0.37)
+    oracle.assert_trees_close(u_k, u_j, msg=name, atol=1e-5, rtol=1e-3)
+    for a, b in zip(jax.tree_util.tree_leaves(s_j), jax.tree_util.tree_leaves(s_k)):
+        assert a.dtype == b.dtype, (name, a.dtype, b.dtype)
+
+
+@pytest.mark.parametrize("name", ("vr_adam", "vr_lamb"))
+def test_transform_bf16_state_dtype(name):
+    """bf16 moment storage: Pallas path must cast m/v/p back to state_dtype
+    (the seed bug left them f32, silently doubling optimizer HBM)."""
+    u_j, u_k, s_j, s_k = oracle.run_transform_pair(name, steps=3, state_dtype="bfloat16")
+    oracle.assert_trees_close(u_k, u_j, msg=name, atol=2e-2, rtol=2e-2)
+    for part in ("m", "v", "p"):
+        for leaf in jax.tree_util.tree_leaves(s_k[part]):
+            assert leaf.dtype == jnp.bfloat16, (name, part, leaf.dtype)
+
+
+@pytest.mark.parametrize("name", VR_NAMES)
+def test_gamma_one_collapses_to_base(name):
+    u_b, u_v = oracle.run_base_collapse(name, steps=3)
+    oracle.assert_trees_close(u_v, u_b, msg=f"{name} gamma=1", atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", ("vr_adam", "vr_lamb"))
+def test_stale_gsnr_steps_agree(name):
+    """Amortized GSNR: stats arrive every 2nd step.  The Pallas fresh-step
+    path must bias-correct p̂ by the stats counter pt (not the raw step) to
+    stay in lockstep with the jnp path."""
+    u_j, u_k, s_j, s_k = oracle.run_transform_pair(name, steps=4, stale_every=2)
+    oracle.assert_trees_close(u_k, u_j, msg=f"{name} stale", atol=1e-5, rtol=1e-4)
+    assert int(s_k["pt"]) == 2 and int(s_k["step"]) == 4
+    assert int(s_j["pt"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# accumulation level: fused scan body == jnp scan body
+# ---------------------------------------------------------------------------
+
+
+def _quad_loss(p, b):
+    x, y = b
+    pred = x @ p["w"] + p["b"]
+    return jnp.mean((pred - y) ** 2), {"mae": jnp.mean(jnp.abs(pred - y))}
+
+
+def test_fused_grad_stats_matches_jnp_scan():
+    from repro.core.accumulate import grad_stats
+
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (64, 10))
+    Y = X @ jnp.arange(1.0, 11.0)
+    params = {"w": jnp.ones(10) * 0.3, "b": jnp.zeros(())}
+    l1, a1, s1 = grad_stats(_quad_loss, params, (X, Y), 8, has_aux=True)
+    l2, a2, s2 = grad_stats(_quad_loss, params, (X, Y), 8, has_aux=True, use_pallas=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(a1["mae"]), np.asarray(a2["mae"]), rtol=1e-6)
+    oracle.assert_trees_close(s2.mean, s1.mean, msg="mean", atol=1e-7, rtol=1e-5)
+    oracle.assert_trees_close(s2.sq_mean, s1.sq_mean, msg="sq_mean", atol=1e-7, rtol=1e-5)
+    assert s2.k == s1.k == 8
+
+
+def test_fused_paths_with_tuple_pytree():
+    """Param pytrees containing tuple nodes must not confuse the pair
+    splitting in kernels/ops.py (a 2-tuple param tree once scrambled Σg and
+    Σg² across leaves — the split is now anchored to the tree structure)."""
+    from repro.core import GradStats
+    from repro.kernels import ops as kops
+
+    g = (jnp.full((4,), 2.0), jnp.full((3, 3), 3.0))  # params tree IS a 2-tuple
+    g_sum, g2_sum = kops.moments_init_tree(g)
+    g_sum, g2_sum = kops.moments_accum_tree(g_sum, g2_sum, g)
+    mean, sq = kops.moments_finalize_tree(g_sum, g2_sum, g, 1)
+    np.testing.assert_allclose(np.asarray(mean[0]), 2.0)
+    np.testing.assert_allclose(np.asarray(mean[1]), 3.0)
+    np.testing.assert_allclose(np.asarray(sq[0]), 4.0)
+    np.testing.assert_allclose(np.asarray(sq[1]), 9.0)
+
+    stats = GradStats(
+        mean=g, sq_mean=jax.tree_util.tree_map(lambda x: jnp.square(x) + 0.1, g), k=4
+    )
+    sg, r = kops.vr_scale_tree(stats, g, 0.1, 1e-12)
+    want0, _ = ref.vr_scale_ref(g[0], stats.sq_mean[0], 0.1, 1e-12)
+    want1, _ = ref.vr_scale_ref(g[1], stats.sq_mean[1], 0.1, 1e-12)
+    np.testing.assert_allclose(np.asarray(sg[0]), np.asarray(want0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sg[1]), np.asarray(want1), rtol=1e-5)
+
+
+def test_fused_train_step_end_to_end():
+    """cfg.parallel.use_pallas threads through trainer -> accumulate ->
+    optimizer: one full VR-LAMB train step matches the jnp pipeline."""
+    import dataclasses
+
+    from repro.configs import get_smoke
+    from repro.data import lm_batches
+    from repro.train import init_state, make_loss_fn, make_train_step
+
+    cfg0 = get_smoke("granite-3-2b").replace(global_batch=8, seq_len=16)
+    cfg0 = cfg0.replace(optimizer=dataclasses.replace(cfg0.optimizer, name="vr_lamb", k=4))
+    batch = next(iter(lm_batches(cfg0.model.vocab_size, 8, 16, seed=0)))
+    outs = {}
+    for pallas in (False, True):
+        cfg = cfg0.replace(parallel=dataclasses.replace(cfg0.parallel, use_pallas=pallas))
+        state = init_state(cfg)
+        step_fn, _ = make_train_step(cfg, make_loss_fn(cfg))
+        new_state, metrics = jax.jit(step_fn)(state, batch)
+        outs[pallas] = (new_state.params, metrics)
+    oracle.assert_trees_close(outs[True][0], outs[False][0], msg="params", atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(
+        float(outs[True][1]["loss"]), float(outs[False][1]["loss"]), rtol=1e-5
+    )
