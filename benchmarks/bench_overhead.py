@@ -7,11 +7,18 @@ win on the update math.
   b) update-math microbench: jnp GSNR pipeline vs fused Pallas kernel
      (interpret mode on CPU — structural check; wall-clock wins are TPU),
   c) accumulation microbench: the paper scan body's two jnp moment tree
-     passes vs the fused Pallas sweep (kernels/grad_stats.py), end to end
+     passes vs the fused Pallas sweep (kernels/flat_stats.py), end to end
      through grad_stats(use_pallas=True), reporting the fused/unfused delta.
+  d) flat vs per-leaf dispatch: the single-launch flat-buffer optimizer step
+     (kernels/flat_update.py) against PR 1's kernel-per-leaf loop, reporting
+     step latency and the structural pallas_call launch counts, emitted
+     machine-readable to BENCH_flat_state.json so the perf trajectory is
+     tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -117,11 +124,78 @@ def accumulation(fast: bool) -> None:
     )
 
 
+def flat_vs_per_leaf(fast: bool) -> dict:
+    """Single-launch flat update vs PR 1's kernel-per-leaf dispatch.
+
+    Same optimizer math, same multi-leaf param tree: the delta isolates the
+    per-leaf pad/unpad DMA + launch overhead the flat refactor removes.  On
+    CPU the Pallas numbers carry interpreter overhead (structural check);
+    the launch counts are the hardware-independent part of the story.
+    """
+    import sys
+
+    tests_dir = os.path.join(os.path.dirname(__file__), "..", "tests")
+    if tests_dir not in sys.path:  # the per-leaf reference dispatch lives there
+        sys.path.insert(0, tests_dir)
+    import oracle
+
+    from repro.configs.base import OptimizerConfig
+    from repro.core import GradStats, make_optimizer
+    from repro.kernels.ops import count_pallas_calls
+
+    _tm = jax.tree_util.tree_map
+    params = oracle.hostile_params()
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    g = _tm(lambda x: x * 0.01, params)
+    stats = GradStats(mean=g, sq_mean=_tm(lambda x: jnp.square(x) + 1e-3, g), k=8)
+    cfg = OptimizerConfig(name="vr_lamb", lr=0.01, schedule="constant", weight_decay=0.01)
+
+    iters = 2 if fast else 4
+    opt = make_optimizer(cfg, use_pallas=True)
+    s_flat = opt.init(params)
+    flat_fn = jax.jit(lambda s: opt.update(g, s, params, stats=stats))
+    n_flat = count_pallas_calls(jax.make_jaxpr(flat_fn)(s_flat))
+    dt_flat, _ = timed(flat_fn, s_flat, warmup=1 if fast else 2, iters=iters)
+
+    z = lambda: _tm(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    zero = jnp.zeros((), jnp.int32)
+    s_leaf = {"step": zero, "pt": zero, "m": z(), "v": z(), "p": z()}
+    leaf_fn = jax.jit(
+        lambda s: oracle.per_leaf_vr_lamb_update(
+            g, s, stats, 0.01, 0.9, 0.999, 0.9, 1e-6, 0.01, 0.1, 1e-12, params
+        )
+    )
+    n_leafcalls = count_pallas_calls(jax.make_jaxpr(leaf_fn)(s_leaf))
+    dt_leaf, _ = timed(leaf_fn, s_leaf, warmup=1 if fast else 2, iters=iters)
+
+    emit("flat_update_step", dt_flat * 1e6, f"launches={n_flat};note=CPU-interpret")
+    emit(
+        "per_leaf_update_step", dt_leaf * 1e6,
+        f"launches={n_leafcalls};leaves={n_leaves};note=CPU-interpret",
+    )
+    emit(
+        "flat_vs_per_leaf_ratio", 0.0,
+        f"flat/per_leaf={dt_flat/dt_leaf:.3f};launches {n_flat} vs {n_leafcalls} (TPU is the real number)",
+    )
+    return {
+        "optimizer": "vr_lamb",
+        "n_leaves": n_leaves,
+        "flat": {"launches": n_flat, "us_per_step": dt_flat * 1e6},
+        "per_leaf": {"launches": n_leafcalls, "us_per_step": dt_leaf * 1e6},
+        "note": "CPU interpret mode: latency is structural only; launch counts are hardware-independent",
+    }
+
+
 def main(fast: bool = False) -> None:
     t0 = time.time()
     trainer_overhead(fast)
     update_math(fast)
     accumulation(fast)
+    rec = flat_vs_per_leaf(fast)
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_flat_state.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {os.path.abspath(out)}")
     print(f"# bench_overhead done in {time.time()-t0:.1f}s")
 
 

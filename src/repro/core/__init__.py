@@ -1,6 +1,13 @@
 from repro.core.accumulate import grad_only, grad_stats, split_batch  # noqa: F401
 from repro.core.baselines import Transform, adam, lamb, lars, momentum, sgd  # noqa: F401
 from repro.core.distributed import device_grad_stats_fn  # noqa: F401
+from repro.core.layout import (  # noqa: F401
+    FlatBuffer,
+    ParamLayout,
+    as_flat,
+    is_flat,
+    unpack_tree,
+)
 from repro.core.gsnr import (  # noqa: F401
     GradStats,
     clip_ratio,

@@ -61,11 +61,15 @@ def grad_stats(
     Right choice for <= ~20B-param models; scan remains the default for
     memory-critical giants.
 
-    use_pallas (scan + squares only): the scan body's two moment tree-passes
-    (g_sum += g; g2_sum += g²) run as ONE fused Pallas sweep per leaf
-    (kernels/grad_stats.py); the carry lives in the kernel's padded layout
-    for the whole scan and the terminal /k normalize is fused with the
-    unpad.  Statistics are identical to the jnp path (oracle-tested).
+    use_pallas: the GradStats carry lives as a ParamLayout flat buffer
+    (core/layout.py).  Under method="scan" (squares only) each microbatch's
+    moment update (g_sum += g; g2_sum += g²) is ONE fused pallas_call over
+    the flat carry (kernels/flat_stats.py) — the gradient tree is packed
+    once per microbatch and the terminal /k normalize is a second single
+    call.  Under method="vmap" the whole (k, param) gradient stack reduces
+    to (mean, sq_mean) in one call.  Either way the returned GradStats
+    carries FlatBuffers, already contiguous for the single-launch optimizer
+    kernels; statistics are identical to the jnp path (oracle-tested).
     """
     mb = split_batch(batch, k)
     if method == "vmap":
@@ -73,17 +77,26 @@ def grad_stats(
         outs, gs = jax.vmap(gfn, in_axes=(None, 0))(params, mb)
         loss, aux = outs if has_aux else (outs, None)
         gs = _tm(lambda x: x.astype(jnp.float32), gs)
-        stats = GradStats(
-            mean=_tm(lambda x: jnp.mean(x, axis=0), gs),
-            sq_mean=_tm(lambda x: jnp.mean(jnp.square(x), axis=0), gs),
-            k=k,
-        )
+        if use_pallas and squares:
+            from repro.core.layout import ParamLayout
+            from repro.kernels import ops as kops
+
+            stats = kops.vmap_moments_flat(gs, ParamLayout.for_tree(params), k)
+        else:
+            stats = GradStats(
+                mean=_tm(lambda x: jnp.mean(x, axis=0), gs),
+                sq_mean=_tm(lambda x: jnp.mean(jnp.square(x), axis=0), gs),
+                k=k,
+            )
         aux_out = _tm(lambda x: jnp.mean(x, axis=0), aux) if has_aux else None
         return jnp.mean(loss), aux_out, stats
     gfn = jax.value_and_grad(loss_fn, has_aux=has_aux)
     fused = use_pallas and squares  # stale steps (no Σg²) are a single add: jnp
     if fused:
+        from repro.core.layout import ParamLayout
         from repro.kernels import ops as kops
+
+        layout = ParamLayout.for_tree(params)
 
     def step(carry, microbatch):
         loss_sum, aux_sum, g_sum = carry[:3]
@@ -92,7 +105,7 @@ def grad_stats(
         g = _tm(lambda x: x.astype(jnp.float32), g)
         aux_new = _tm(jnp.add, aux_sum, aux) if has_aux else aux_sum
         if fused:
-            g_sum, g2_sum = kops.moments_accum_tree(g_sum, carry[3], g)
+            g_sum, g2_sum = kops.moments_accum_flat(g_sum, carry[3], g, layout)
             return (loss_sum + loss, aux_new, g_sum, g2_sum), None
         g_sum = _tm(jnp.add, g_sum, g)
         new = (loss_sum + loss, aux_new, g_sum)
@@ -106,7 +119,7 @@ def grad_stats(
         aux_shape = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params, _tm(lambda x: x[0], mb))
         aux0 = _tm(lambda s: jnp.zeros(s.shape, s.dtype), aux_shape)
     if fused:
-        g0, g20 = kops.moments_init_tree(params)
+        g0, g20 = kops.moments_init_flat(layout)
         carry0 = (jnp.zeros((), jnp.float32), aux0, g0, g20)
     else:
         zeros = _tm(lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -117,8 +130,7 @@ def grad_stats(
     loss_sum, aux_sum = out_carry[:2]
     inv = 1.0 / k
     if fused:
-        mean, sq_mean = kops.moments_finalize_tree(out_carry[2], out_carry[3], params, k)
-        stats = GradStats(mean=mean, sq_mean=sq_mean, k=k)
+        stats = kops.moments_finalize_flat(out_carry[2], out_carry[3], k, layout)
     else:
         g_sum = out_carry[2]
         g2_sum = out_carry[3] if squares else None

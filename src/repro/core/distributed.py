@@ -50,10 +50,18 @@ def device_grad_stats_fn(
     data_axis: str = "data",
     fused: bool = True,
     has_aux: bool = False,
+    flat: bool = False,
 ) -> Callable:
     """Returns f(params, batch) -> (loss, aux, GradStats) with device-wise k.
 
     params replicated, batch sharded over ``data_axis``.
+
+    flat=True (the use_pallas / flat-state path): the local gradient packs
+    into the ParamLayout flat buffer first, so the fused collective is one
+    pmean over a single contiguous (2*rows, LANE) array — no per-leaf
+    stacked [g, g²] tree copy — and the returned GradStats carries
+    FlatBuffers ready for the single-launch optimizer kernels.  fused=False
+    still reproduces the paper's two-collective schedule, over flat carries.
     """
     k = dict(mesh.shape)[data_axis]
     gfn = jax.value_and_grad(loss_fn, has_aux=has_aux)
@@ -62,7 +70,18 @@ def device_grad_stats_fn(
         out, g = gfn(params, batch)
         loss, aux = out if has_aux else (out, None)
         g = _tm(lambda x: x.astype(jnp.float32), g)
-        if fused:
+        if flat:
+            from repro.core.layout import ParamLayout
+
+            gf = ParamLayout.for_tree(params).pack(g, jnp.float32)
+            if fused:
+                payload = jnp.concatenate([gf, jnp.square(gf)])  # one flat carry
+                payload = jax.lax.pmean(payload, data_axis)  # one collective
+                mean, sq = jnp.split(payload, 2)
+            else:  # paper-faithful two-collective schedule, flat carries
+                mean = jax.lax.pmean(gf, data_axis)
+                sq = jax.lax.pmean(jnp.square(gf), data_axis)
+        elif fused:
             payload = _tm(lambda x: jnp.stack([x, jnp.square(x)]), g)
             payload = jax.lax.pmean(payload, data_axis)  # one collective
             mean = _tm(lambda s: s[0], payload)
@@ -92,6 +111,11 @@ def device_grad_stats_fn(
     @functools.wraps(loss_fn)
     def fn(params, batch) -> Tuple[jnp.ndarray, Any, GradStats]:
         loss, aux, mean, sq = smapped(params, batch)
+        if flat:
+            from repro.core.layout import FlatBuffer, ParamLayout
+
+            layout = ParamLayout.for_tree(params)
+            mean, sq = FlatBuffer(mean, layout), FlatBuffer(sq, layout)
         return loss, (aux if has_aux else None), GradStats(mean=mean, sq_mean=sq, k=k)
 
     return fn

@@ -29,15 +29,29 @@ class GradStats(NamedTuple):
     mean:    E_d[g_d]        — the usual (all-reduced) gradient
     sq_mean: E_d[g_d ⊗ g_d]  — mean of element-wise squared group gradients
     k:       number of groups (devices / microbatches)
+
+    On the flat-state path (use_pallas) mean/sq_mean are FlatBuffer nodes
+    (core/layout.py) — already contiguous for the single-launch optimizer
+    kernels.  ``as_tree()`` unpacks for the per-layer jnp pipeline below.
     """
 
     mean: PyTree
     sq_mean: PyTree
     k: int
 
+    def as_tree(self) -> "GradStats":
+        """GradStats with pytree-valued moments (no-op if already trees)."""
+        from repro.core.layout import is_flat
+
+        if not is_flat(self.mean):
+            return self
+        sq = self.sq_mean.unpack() if is_flat(self.sq_mean) else self.sq_mean
+        return self._replace(mean=self.mean.unpack(), sq_mean=sq)
+
 
 def variance(stats: GradStats) -> PyTree:
     """sigma^2 = E[g_d^2] - E[g_d]^2, clipped at 0 (paper eq. 7)."""
+    stats = stats.as_tree()
     return jax.tree_util.tree_map(
         lambda s, m: jnp.maximum(s - jnp.square(m), 0.0), stats.sq_mean, stats.mean
     )
@@ -45,6 +59,7 @@ def variance(stats: GradStats) -> PyTree:
 
 def raw_gsnr(stats: GradStats, eps: float = 1e-12) -> PyTree:
     """r = g^2 / sigma^2 (paper eq. 2 with the batch estimator of eq. 7)."""
+    stats = stats.as_tree()
     var = variance(stats)
     return jax.tree_util.tree_map(
         lambda m, v: jnp.square(m) / (v + eps), stats.mean, var

@@ -19,9 +19,15 @@ update — otherwise m/v would be biased for the next step (paper's remark in
 ``gamma=1.0`` collapses r to exactly 1 (clip floor == ceiling), so every VR
 optimizer reduces to its base optimizer — a property test locks this in.
 
-When ``use_pallas`` is set, the fused element-wise pipeline runs through the
-Pallas TPU kernels in kernels/ (vr_update / vr_adam); the jnp path here is
-their oracle.
+When ``use_pallas`` is set, the optimizer state (m/v/p) lives as ParamLayout
+flat buffers (core/layout.py) and every fresh-stats update is ONE fused
+``pallas_call`` over the whole parameter set (kernels/flat_update.py via
+kernels/ops.py) — per-leaf mean(r) and trust-ratio reductions run as grid
+phases inside the kernel, so there is no jnp prepass and no per-leaf
+dispatch loop.  Amortized-GSNR "stale" steps (no Σg² tree) run the same
+element-wise jnp math below directly on the flat buffers: because
+FlatBuffer is a pytree node, ``_vr_adam_dir`` works unchanged, fully
+XLA-fused over a single array.  The jnp path here is the oracle either way.
 """
 from __future__ import annotations
 
@@ -32,9 +38,23 @@ import jax.numpy as jnp
 
 from repro.core import baselines as B
 from repro.core.gsnr import GradStats, gsnr_scale
+from repro.core.layout import FlatBuffer, ParamLayout, as_flat, is_flat
 
 PyTree = Any
 _tm = jax.tree_util.tree_map
+
+
+def _flat_zeros_fn(params, state_dtype: str = "float32"):
+    """() -> FlatBuffer of zeros in the params layout (flat-state init)."""
+    layout = ParamLayout.for_tree(params)
+    sd = jnp.dtype(state_dtype)
+    return lambda: FlatBuffer(layout.zeros(sd), layout)
+
+
+def _unpacked(upd):
+    """Updates cross back into pytree land at the transform boundary (the
+    trainer adds them to the tree-valued params)."""
+    return upd.unpack() if is_flat(upd) else upd
 
 
 def _require(stats: Optional[GradStats]) -> GradStats:
@@ -61,7 +81,7 @@ def vr_sgd(lr_fn: Callable, gamma: float = 0.1, eps: float = 1e-12, use_pallas: 
         lr = lr_fn(state["step"])
         sg, _r = _scaled_grads(grads, stats, gamma, eps, use_pallas)
         upd = _tm(lambda g: -lr * g, sg)
-        return upd, {"step": state["step"] + 1}
+        return _unpacked(upd), {"step": state["step"] + 1}
 
     return B.Transform(init, update)
 
@@ -70,14 +90,15 @@ def vr_momentum(
     lr_fn: Callable, mu: float = 0.9, gamma: float = 0.1, eps: float = 1e-12, use_pallas: bool = False
 ) -> B.Transform:
     def init(params):
-        return {"step": jnp.zeros((), jnp.int32), "m": _tm(jnp.zeros_like, params)}
+        z = _flat_zeros_fn(params)() if use_pallas else _tm(jnp.zeros_like, params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z}
 
     def update(grads, state, params=None, stats=None):
         lr = lr_fn(state["step"])
         sg, _r = _scaled_grads(grads, stats, gamma, eps, use_pallas)
         m = _tm(lambda m_, g: mu * m_ + g, state["m"], sg)
         upd = _tm(lambda m_: -lr * m_, m)
-        return upd, {"step": state["step"] + 1, "m": m}
+        return _unpacked(upd), {"step": state["step"] + 1, "m": m}
 
     return B.Transform(init, update)
 
@@ -132,7 +153,10 @@ def vr_adam(
 ) -> B.Transform:
     def init(params):
         sd = jnp.dtype(state_dtype)
-        z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
+        if use_pallas:
+            z = _flat_zeros_fn(params, state_dtype)
+        else:
+            z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
         return {"step": jnp.zeros((), jnp.int32), "pt": jnp.zeros((), jnp.int32),
                 "m": z(), "v": z(), "p": z()}
 
@@ -145,13 +169,19 @@ def vr_adam(
                 grads, state, _require(stats), lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
                 params, state_dtype,
             )
+        if use_pallas:
+            # stale-GSNR step on flat state: the element-wise math below runs
+            # directly on the flat buffers (one fused XLA sweep, no launches)
+            layout = state["m"].layout
+            grads = as_flat(grads, layout)
+            params = as_flat(params, layout) if params is not None else None
         d, new_state = _vr_adam_dir(
             grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
         )
         if wd and params is not None:
             d = _tm(lambda d_, p_: d_ + wd * p_, d, params)
         upd = _tm(lambda d_: -lr * d_, d)
-        return upd, new_state
+        return _unpacked(upd), new_state
 
     return B.Transform(init, update)
 
@@ -167,6 +197,11 @@ def vr_lars(
 ) -> B.Transform:
     base = B.lars(lr_fn, mu=mu, wd=wd, trust=trust)
 
+    def init(params):
+        if use_pallas:
+            return {"step": jnp.zeros((), jnp.int32), "m": _flat_zeros_fn(params)()}
+        return base.init(params)
+
     def update(grads, state, params, stats=None):
         if use_pallas:
             from repro.kernels import ops as kops
@@ -178,7 +213,7 @@ def vr_lars(
         sg, _r = _scaled_grads(grads, stats, gamma, eps, False)
         return base.update(sg, state, params)
 
-    return B.Transform(base.init, update)
+    return B.Transform(init, update)
 
 
 def vr_lamb(
@@ -195,7 +230,10 @@ def vr_lamb(
 ) -> B.Transform:
     def init(params):
         sd = jnp.dtype(state_dtype)
-        z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
+        if use_pallas:
+            z = _flat_zeros_fn(params, state_dtype)
+        else:
+            z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
         return {"step": jnp.zeros((), jnp.int32), "pt": jnp.zeros((), jnp.int32),
                 "m": z(), "v": z(), "p": z()}
 
@@ -208,6 +246,18 @@ def vr_lamb(
                 grads, state, _require(stats), lr, b1, b2, b3, eps, wd, gamma,
                 gsnr_eps, params, state_dtype,
             )
+        if use_pallas:
+            # stale-GSNR step on flat state: element-wise chain via the shared
+            # jnp math, then the per-leaf trust ratio as a segment reduction
+            # over the flat rows (kernels/ops.py) — no per-leaf dispatch.
+            from repro.kernels import ops as kops
+
+            layout = state["m"].layout
+            d, new_state = _vr_adam_dir(
+                as_flat(grads, layout), state, None, b1, b2, b3, eps, gamma,
+                gsnr_eps, state_dtype,
+            )
+            return kops.lamb_trust_flat(d, params, lr, wd), new_state
         d, new_state = _vr_adam_dir(
             grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
         )

@@ -1,0 +1,109 @@
+"""Pallas TPU kernels: flat-buffer GradStats accumulation — ONE pallas_call
+per scan step / finalize over the whole parameter set.
+
+PR 1's fused accumulation (kernels/grad_stats.py) removed the double HBM
+sweep of the scan body but still launched one kernel per pytree leaf with a
+pad/unpad round-trip each.  Here the carry (g_sum, g2_sum) lives in the
+ParamLayout flat ``(n_rows, LANE)`` buffer for the whole scan, the incoming
+gradient tree is packed once per microbatch (core/layout.py), and each of
+
+  * ``flat_moments_accum``     (scan body:  g_sum += g; g2_sum += g*g)
+  * ``flat_moments_finalize``  (terminal /k normalize of both moments)
+  * ``flat_vmap_moments``      (batched (k, n_rows, LANE) stack -> moments)
+
+is a single ``pallas_call`` with a grid over row-blocks.  The kernel bodies
+for accum/finalize are shared with the per-leaf path (grad_stats.py), which
+stays as the differential oracle reference.
+
+``flat_vmap_moments`` covers the vmap stats method (ROADMAP item: it used to
+ignore use_pallas): the (k, param) gradient stack reduces to (mean, sq_mean)
+in one kernel, grid (n_blocks, k) with k minor so the output block revisits
+are consecutive (the standard accumulate-in-VMEM pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.layout import LANE, ParamLayout
+from repro.kernels.grad_stats import _accum_kernel, _finalize_kernel
+
+
+def _blk(layout: ParamLayout):
+    return pl.BlockSpec((layout.block_rows, LANE), lambda i: (i, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
+def flat_moments_accum(gs, g2s, g, layout: ParamLayout, interpret: bool = True):
+    """One scan-body update of both flat moment carries: a single launch."""
+    blk = _blk(layout)
+    sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), jnp.float32)
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=(layout.n_blocks,),
+        in_specs=[blk, blk, blk],
+        out_specs=(blk, blk),
+        out_shape=(sds, sds),
+        interpret=interpret,
+    )(gs, g2s, g)
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
+def flat_moments_finalize(gs, g2s, k, layout: ParamLayout, interpret: bool = True):
+    """Terminal /k normalize of the flat carries: a single launch.
+
+    k may be traced.  Returns flat (mean, sq_mean) f32 buffers.
+    """
+    inv = (1.0 / jnp.asarray(k, jnp.float32)).reshape(1, 1)
+    blk = _blk(layout)
+    sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), jnp.float32)
+    return pl.pallas_call(
+        _finalize_kernel,
+        grid=(layout.n_blocks,),
+        in_specs=[blk, blk, pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=(blk, blk),
+        out_shape=(sds, sds),
+        interpret=interpret,
+    )(gs, g2s, inv)
+
+
+def _vmap_kernel(g_ref, mean_ref, sq_ref, *, nk: int, inv: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        mean_ref[...] = jnp.zeros_like(mean_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    g = g_ref[0].astype(jnp.float32)
+    mean_ref[...] += g
+    sq_ref[...] += g * g
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        mean_ref[...] *= inv
+        sq_ref[...] *= inv
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "k", "interpret"))
+def flat_vmap_moments(gstack, layout: ParamLayout, k: int, interpret: bool = True):
+    """(k, n_rows, LANE) gradient stack -> flat (mean, sq_mean): one launch.
+
+    The k axis is the minor grid dimension, so each output block stays
+    resident in VMEM while its k slices accumulate, then normalizes in place
+    on the last visit.
+    """
+    br = layout.block_rows
+    sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), jnp.float32)
+    out_blk = pl.BlockSpec((br, LANE), lambda b, j: (b, 0))
+    return pl.pallas_call(
+        functools.partial(_vmap_kernel, nk=k, inv=1.0 / k),
+        grid=(layout.n_blocks, k),
+        in_specs=[pl.BlockSpec((1, br, LANE), lambda b, j: (j, b, 0))],
+        out_specs=(out_blk, out_blk),
+        out_shape=(sds, sds),
+        interpret=interpret,
+    )(gstack)

@@ -1,0 +1,388 @@
+"""Pallas TPU kernels: the entire VRGD update as ONE pallas_call.
+
+Each kernel runs a multi-phase grid ``(n_phases, n_blocks)`` over the
+ParamLayout flat buffer (core/layout.py).  Per-leaf ("layer") scalars —
+the GSNR normalizer 1/mean(r) and the LAMB/LARS trust-ratio norms — are
+computed as partial reductions into a persistent VMEM scratch accumulator
+of shape (leaf_slots, LANE), one row per leaf, indexed by the block's leaf
+id; a later phase revisits every block and applies the element-wise update
+with those scalars.  This folds the old jnp 1/mean(r) prepass (two extra
+memory-bound sweeps over g and g2 per leaf per step) into the kernel grid
+and replaces the per-leaf dispatch loop with a single launch:
+
+  flat_vr_scale  2 phases:  [r-mean partials] -> [scale]      (VR-SGD/Mom.)
+  flat_vr_adam   2 phases:  [r-mean partials] -> [full update] (Alg. 3)
+  flat_vr_lamb   3 phases:  [r-mean] -> [u + norm partials] -> [trust apply]
+  flat_vr_lars   3 phases:  [r-mean] -> [u + norm partials] -> [trust apply]
+
+The 3-phase kernels stash the pre-trust-ratio update u in the ``upd``
+output during phase 1 and read it back when the block is revisited in
+phase 2 (flushed to HBM between visits; validated in interpret mode, and a
+named TPU-Mosaic validation item in ROADMAP — Mosaic must re-fetch output
+windows on non-consecutive revisits).
+
+Semantics match the per-leaf oracle kernels (vr_update/vr_adam/vr_lamb.py)
+and the jnp path exactly (tests/test_oracle.py + tests/test_layout.py):
+the GSNR ratio derives from the raw group moments (g, g2) but scales the
+possibly grad-clipped gradient ga; moments are stored in ``state_dtype``
+with all math in f32; zero tail padding (g = ga = w = 0) keeps every
+in-kernel reduction exact without masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.layout import LANE, ParamLayout
+
+_f32 = jnp.float32
+
+
+def _specs(layout: ParamLayout):
+    """(block, leaf-id, inv-size, scalar) BlockSpecs for an (ph, b) grid."""
+    blk = pl.BlockSpec((layout.block_rows, LANE), lambda ph, b: (b, 0))
+    lid = pl.BlockSpec((1, 1), lambda ph, b: (b, 0))
+    inv = pl.BlockSpec((layout.leaf_slots, 1), lambda ph, b: (0, 0))
+    scal = pl.BlockSpec((1, 8), lambda ph, b: (0, 0))
+    return blk, lid, inv, scal
+
+
+def _leaf_meta(layout: ParamLayout):
+    return jnp.asarray(layout.block_leaf_ids()), jnp.asarray(layout.leaf_inv_sizes())
+
+
+def _scal8(*vals) -> jnp.ndarray:
+    """Dynamic scalars packed into one (1, 8) f32 block."""
+    v = list(vals) + [0.0] * (8 - len(vals))
+    return jnp.stack([jnp.asarray(x, _f32) for x in v]).reshape(1, 8)
+
+
+def _leaf_scalar(ref, leaf):
+    """Read one per-leaf scalar from a (leaf_slots, ...) ref row."""
+    return jnp.sum(ref[pl.ds(leaf, 1), :])
+
+
+def _raw_r(g_ref, g2_ref, gsnr_eps):
+    g = g_ref[...].astype(_f32)
+    g2 = g2_ref[...].astype(_f32)
+    var = jnp.maximum(g2 - g * g, 0.0)
+    return (g * g) / (var + gsnr_eps)
+
+
+def _inv_mean_r(racc_ref, invsz_ref, leaf):
+    mean_r = _leaf_scalar(racc_ref, leaf) * _leaf_scalar(invsz_ref, leaf)
+    return 1.0 / jnp.maximum(mean_r, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# VR scale (VR-SGD / VR-Momentum hot path)
+# ---------------------------------------------------------------------------
+
+
+def _vr_scale_kernel(
+    lid_ref, invsz_ref, g_ref, ga_ref, g2_ref, sg_ref, r_ref, racc_ref,
+    *, gamma, eps,
+):
+    ph, b = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((ph == 0) & (b == 0))
+    def _init():
+        racc_ref[...] = jnp.zeros_like(racc_ref)
+
+    leaf = lid_ref[0, 0]
+    r_raw = _raw_r(g_ref, g2_ref, eps)
+
+    @pl.when(ph == 0)
+    def _reduce():
+        racc_ref[pl.ds(leaf, 1), :] += jnp.sum(r_raw, axis=0, keepdims=True)
+
+    @pl.when(ph == 1)
+    def _apply():
+        r = jnp.clip(r_raw * _inv_mean_r(racc_ref, invsz_ref, leaf), gamma, 1.0)
+        sg_ref[...] = r * ga_ref[...].astype(_f32)
+        r_ref[...] = r
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "gamma", "eps", "interpret"))
+def flat_vr_scale(g, ga, g2, layout: ParamLayout, *, gamma, eps, interpret: bool = True):
+    """Fused (scaled_grad, r) over the whole flat buffer: one launch."""
+    blk, lid, inv, _ = _specs(layout)
+    lids, invsz = _leaf_meta(layout)
+    sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), _f32)
+    return pl.pallas_call(
+        functools.partial(_vr_scale_kernel, gamma=gamma, eps=eps),
+        grid=(2, layout.n_blocks),
+        in_specs=[lid, inv, blk, blk, blk],
+        out_specs=(blk, blk),
+        out_shape=(sds, sds),
+        scratch_shapes=[pltpu.VMEM((layout.leaf_slots, LANE), _f32)],
+        interpret=interpret,
+    )(lids, invsz, g, ga, g2)
+
+
+# ---------------------------------------------------------------------------
+# VR-Adam (paper Alg. 3): full update incl. weight decay and -lr
+# ---------------------------------------------------------------------------
+
+
+def _adam_math(r_raw, inv_mean, ga_ref, m_ref, v_ref, p_ref, scal_ref, *, b1, b2, b3, gamma, eps):
+    """Shared element-wise chain: GSNR r -> p momentum -> ghat -> m/v ->
+    bias-corrected Adam direction.  Returns (direction, m', v', p')."""
+    bc1, bc2, bc3 = scal_ref[0, 1], scal_ref[0, 2], scal_ref[0, 3]
+    ga = ga_ref[...].astype(_f32)
+    m = m_ref[...].astype(_f32)
+    v = v_ref[...].astype(_f32)
+    p = p_ref[...].astype(_f32)
+    r = jnp.clip(r_raw * inv_mean, gamma, 1.0)
+    p_new = b3 * p + (1.0 - b3) * r
+    ghat = (p_new / bc3) * ga
+    m_new = b1 * m + (1.0 - b1) * ghat
+    v_new = b2 * v + (1.0 - b2) * ghat * ghat
+    direction = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    return direction, m_new, v_new, p_new
+
+
+def _vr_adam_kernel(
+    lid_ref, invsz_ref, g_ref, ga_ref, g2_ref, m_ref, v_ref, p_ref, w_ref, scal_ref,
+    upd_ref, m_out, v_out, p_out, racc_ref,
+    *, b1, b2, b3, eps, wd, gamma, gsnr_eps,
+):
+    ph, b = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((ph == 0) & (b == 0))
+    def _init():
+        racc_ref[...] = jnp.zeros_like(racc_ref)
+
+    leaf = lid_ref[0, 0]
+    r_raw = _raw_r(g_ref, g2_ref, gsnr_eps)
+
+    @pl.when(ph == 0)
+    def _reduce():
+        racc_ref[pl.ds(leaf, 1), :] += jnp.sum(r_raw, axis=0, keepdims=True)
+
+    @pl.when(ph == 1)
+    def _apply():
+        lr = scal_ref[0, 0]
+        direction, m_new, v_new, p_new = _adam_math(
+            r_raw, _inv_mean_r(racc_ref, invsz_ref, leaf),
+            ga_ref, m_ref, v_ref, p_ref, scal_ref,
+            b1=b1, b2=b2, b3=b3, gamma=gamma, eps=eps,
+        )
+        u = direction + wd * w_ref[...].astype(_f32)
+        upd_ref[...] = -lr * u
+        m_out[...] = m_new.astype(m_out.dtype)
+        v_out[...] = v_new.astype(v_out.dtype)
+        p_out[...] = p_new.astype(p_out.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "layout", "b1", "b2", "b3", "eps", "wd", "gamma", "gsnr_eps", "state_dtype", "interpret",
+    ),
+)
+def flat_vr_adam(
+    g, ga, g2, m, v, p, w, scal, layout: ParamLayout,
+    *, b1, b2, b3, eps, wd, gamma, gsnr_eps, state_dtype="float32", interpret: bool = True,
+):
+    """One launch for the full VR-Adam step: returns (upd, m', v', p').
+
+    scal = _scal8(lr, bc1, bc2, bc3).  upd already includes weight decay and
+    the -lr scale; m'/v'/p' come back in ``state_dtype``.
+    """
+    blk, lid, inv, scal_spec = _specs(layout)
+    lids, invsz = _leaf_meta(layout)
+    sd = jnp.dtype(state_dtype)
+    f32_sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), _f32)
+    sd_sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), sd)
+    return pl.pallas_call(
+        functools.partial(
+            _vr_adam_kernel,
+            b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
+        ),
+        grid=(2, layout.n_blocks),
+        in_specs=[lid, inv] + [blk] * 7 + [scal_spec],
+        out_specs=(blk,) * 4,
+        out_shape=(f32_sds, sd_sds, sd_sds, sd_sds),
+        scratch_shapes=[pltpu.VMEM((layout.leaf_slots, LANE), _f32)],
+        interpret=interpret,
+    )(lids, invsz, g, ga, g2, m, v, p, w, scal)
+
+
+# ---------------------------------------------------------------------------
+# VR-LAMB (paper Alg. 5): Adam direction + per-leaf trust ratio
+# ---------------------------------------------------------------------------
+
+
+def _trust_ratio(uacc_ref, wacc_ref, leaf, *, numer_is_phi: bool, trust: float):
+    """LAMB (phi(||w||)) or LARS (trust*||w||) ratio from the norm partials.
+
+    The phi clamp must stay in lockstep with baselines._lamb_phi (the jnp
+    oracle) — it is inlined here because the kernel body cannot depend on
+    core/ at trace time without dragging the whole module graph into Mosaic.
+    """
+    un = jnp.sqrt(_leaf_scalar(uacc_ref, leaf))
+    pn = jnp.sqrt(_leaf_scalar(wacc_ref, leaf))
+    numer = jnp.clip(pn, 0.0, 10.0) if numer_is_phi else trust * pn
+    return jnp.where((pn > 0) & (un > 0), numer / (un + 1e-12), 1.0)
+
+
+def _vr_lamb_kernel(
+    lid_ref, invsz_ref, g_ref, ga_ref, g2_ref, m_ref, v_ref, p_ref, w_ref, scal_ref,
+    upd_ref, m_out, v_out, p_out, racc_ref, uacc_ref, wacc_ref,
+    *, b1, b2, b3, eps, wd, gamma, gsnr_eps,
+):
+    ph, b = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((ph == 0) & (b == 0))
+    def _init():
+        racc_ref[...] = jnp.zeros_like(racc_ref)
+        uacc_ref[...] = jnp.zeros_like(uacc_ref)
+        wacc_ref[...] = jnp.zeros_like(wacc_ref)
+
+    leaf = lid_ref[0, 0]
+
+    @pl.when(ph == 0)
+    def _reduce():
+        racc_ref[pl.ds(leaf, 1), :] += jnp.sum(
+            _raw_r(g_ref, g2_ref, gsnr_eps), axis=0, keepdims=True
+        )
+
+    @pl.when(ph == 1)
+    def _compute():
+        w = w_ref[...].astype(_f32)
+        direction, m_new, v_new, p_new = _adam_math(
+            _raw_r(g_ref, g2_ref, gsnr_eps),
+            _inv_mean_r(racc_ref, invsz_ref, leaf),
+            ga_ref, m_ref, v_ref, p_ref, scal_ref,
+            b1=b1, b2=b2, b3=b3, gamma=gamma, eps=eps,
+        )
+        # padded tail: g = ga = w = 0 -> m/v/direction = 0, u = 0 — the norm
+        # partials below see exact zeros there.
+        u = direction + wd * w
+        upd_ref[...] = u  # stashed; phase 2 rescales in place
+        m_out[...] = m_new.astype(m_out.dtype)
+        v_out[...] = v_new.astype(v_out.dtype)
+        p_out[...] = p_new.astype(p_out.dtype)
+        uacc_ref[pl.ds(leaf, 1), :] += jnp.sum(u * u, axis=0, keepdims=True)
+        wacc_ref[pl.ds(leaf, 1), :] += jnp.sum(w * w, axis=0, keepdims=True)
+
+    @pl.when(ph == 2)
+    def _apply():
+        lr = scal_ref[0, 0]
+        ratio = _trust_ratio(uacc_ref, wacc_ref, leaf, numer_is_phi=True, trust=0.0)
+        upd_ref[...] = -lr * ratio * upd_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "layout", "b1", "b2", "b3", "eps", "wd", "gamma", "gsnr_eps", "state_dtype", "interpret",
+    ),
+)
+def flat_vr_lamb(
+    g, ga, g2, m, v, p, w, scal, layout: ParamLayout,
+    *, b1, b2, b3, eps, wd, gamma, gsnr_eps, state_dtype="float32", interpret: bool = True,
+):
+    """One launch for the full VR-LAMB step: returns (upd, m', v', p').
+
+    Three grid phases: r-mean partials, element-wise update + trust-ratio
+    norm partials, per-leaf trust-ratio apply (-lr * ratio * u in place).
+    """
+    blk, lid, inv, scal_spec = _specs(layout)
+    lids, invsz = _leaf_meta(layout)
+    sd = jnp.dtype(state_dtype)
+    f32_sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), _f32)
+    sd_sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), sd)
+    acc = pltpu.VMEM((layout.leaf_slots, LANE), _f32)
+    return pl.pallas_call(
+        functools.partial(
+            _vr_lamb_kernel,
+            b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
+        ),
+        grid=(3, layout.n_blocks),
+        in_specs=[lid, inv] + [blk] * 7 + [scal_spec],
+        out_specs=(blk,) * 4,
+        out_shape=(f32_sds, sd_sds, sd_sds, sd_sds),
+        scratch_shapes=[acc, acc, acc],
+        interpret=interpret,
+    )(lids, invsz, g, ga, g2, m, v, p, w, scal)
+
+
+# ---------------------------------------------------------------------------
+# VR-LARS (§4.2): GSNR scale + per-leaf trust ratio into heavy-ball momentum
+# ---------------------------------------------------------------------------
+
+
+def _vr_lars_kernel(
+    lid_ref, invsz_ref, g_ref, ga_ref, g2_ref, m_ref, w_ref, scal_ref,
+    upd_ref, m_out, racc_ref, uacc_ref, wacc_ref,
+    *, mu, wd, trust, eps,
+):
+    ph, b = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((ph == 0) & (b == 0))
+    def _init():
+        racc_ref[...] = jnp.zeros_like(racc_ref)
+        uacc_ref[...] = jnp.zeros_like(uacc_ref)
+        wacc_ref[...] = jnp.zeros_like(wacc_ref)
+
+    leaf = lid_ref[0, 0]
+
+    @pl.when(ph == 0)
+    def _reduce():
+        racc_ref[pl.ds(leaf, 1), :] += jnp.sum(
+            _raw_r(g_ref, g2_ref, eps), axis=0, keepdims=True
+        )
+
+    @pl.when(ph == 1)
+    def _compute():
+        gamma = scal_ref[0, 1]
+        w = w_ref[...].astype(_f32)
+        r = jnp.clip(
+            _raw_r(g_ref, g2_ref, eps) * _inv_mean_r(racc_ref, invsz_ref, leaf),
+            gamma, 1.0,
+        )
+        u = r * ga_ref[...].astype(_f32) + wd * w  # padded tail: ga = w = 0 -> u = 0
+        upd_ref[...] = u  # stashed; phase 2 folds into the momentum
+        uacc_ref[pl.ds(leaf, 1), :] += jnp.sum(u * u, axis=0, keepdims=True)
+        wacc_ref[pl.ds(leaf, 1), :] += jnp.sum(w * w, axis=0, keepdims=True)
+
+    @pl.when(ph == 2)
+    def _apply():
+        lr = scal_ref[0, 0]
+        ratio = _trust_ratio(uacc_ref, wacc_ref, leaf, numer_is_phi=False, trust=trust)
+        m_new = mu * m_ref[...].astype(_f32) + ratio * upd_ref[...]
+        m_out[...] = m_new
+        upd_ref[...] = -lr * m_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("layout", "mu", "wd", "trust", "eps", "interpret")
+)
+def flat_vr_lars(
+    g, ga, g2, m, w, scal, layout: ParamLayout,
+    *, mu, wd, trust, eps, interpret: bool = True,
+):
+    """One launch for the full VR-LARS step: returns (upd, m').
+
+    scal = _scal8(lr, gamma) — gamma rides in the scalar block because the
+    LARS tests sweep it densely and a static gamma would retrace per value.
+    """
+    blk, lid, inv, scal_spec = _specs(layout)
+    lids, invsz = _leaf_meta(layout)
+    sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), _f32)
+    acc = pltpu.VMEM((layout.leaf_slots, LANE), _f32)
+    return pl.pallas_call(
+        functools.partial(_vr_lars_kernel, mu=mu, wd=wd, trust=trust, eps=eps),
+        grid=(3, layout.n_blocks),
+        in_specs=[lid, inv] + [blk] * 5 + [scal_spec],
+        out_specs=(blk, blk),
+        out_shape=(sds, sds),
+        scratch_shapes=[acc, acc, acc],
+        interpret=interpret,
+    )(lids, invsz, g, ga, g2, m, w, scal)

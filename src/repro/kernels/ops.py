@@ -2,10 +2,17 @@
 stacks, with backend dispatch: real Mosaic lowering on TPU, interpret mode
 elsewhere (so CPU tests execute the same kernel bodies).
 
-Every wrapper here is required to be bit-for-bit interchangeable (up to f32
-rounding) with the jnp path in core/vrgd.py / core/accumulate.py — the
-differential oracle harness (tests/oracle.py) enforces it.  Two conventions
-keep the paths aligned:
+Since the flat-state refactor every optimizer entry point here is ONE
+``pallas_call`` over the ParamLayout flat buffer (kernels/flat_update.py,
+kernels/flat_stats.py) — no per-leaf dispatch loop, no per-leaf pad/unpad,
+and no jnp 1/mean(r) prepass (the mean reduction runs as the kernel's first
+grid phase).  The per-leaf kernels (vr_update/vr_adam/vr_lamb/grad_stats)
+remain as oracle references, exercised by tests/oracle.py.
+
+Every wrapper is required to be bit-for-bit interchangeable (up to f32
+rounding and reduction order) with the jnp path in core/vrgd.py /
+core/accumulate.py — the differential oracle harness enforces it.  Two
+conventions keep the paths aligned:
 
   * the GSNR ratio derives from the raw group moments (stats.mean, sq_mean)
     but multiplies the gradient actually entering the update (the ``grads``
@@ -13,6 +20,11 @@ keep the paths aligned:
   * optimizer moments are stored in ``state_dtype`` (math always f32), and
     the GSNR-momentum bias correction uses the stats-step counter ``pt``,
     not the raw step — they differ under amortized (stale) GSNR refresh.
+
+Optimizer state arrives as FlatBuffer nodes (core/layout.py); tree-valued
+inputs (tests, the amortized-GSNR stale path) are packed on entry.  A tree
+whose structure diverges from the param layout fails loudly in
+``ParamLayout.check_tree`` instead of deep inside flatten_up_to.
 """
 from __future__ import annotations
 
@@ -22,48 +34,69 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gsnr import GradStats
+from repro.core.layout import FlatBuffer, ParamLayout, is_flat
 from repro.kernels import flash_attention as fa
-from repro.kernels import grad_stats as gsk
-from repro.kernels import vr_adam as va
-from repro.kernels import vr_lamb as vl
-from repro.kernels import vr_update as vu
-
-_tm = jax.tree_util.tree_map
+from repro.kernels import flat_stats as fs
+from repro.kernels import flat_update as fu
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _leaves(treedef, *trees):
-    return [treedef.flatten_up_to(t) for t in trees]
+def count_pallas_calls(jaxpr) -> int:
+    """Number of pallas_call equations anywhere in a (closed) jaxpr,
+    recursing into scan/cond/jit sub-jaxprs — the structural check behind
+    the one-launch-per-step guarantee (tests/test_layout.py, benchmarks)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for u in vs:
+                if hasattr(u, "jaxpr") or hasattr(u, "eqns"):
+                    n += count_pallas_calls(u)
+    return n
 
 
-def _map_unzip(fn, ref_tree, *rest_trees):
-    """Map ``fn`` (returning an (a, b) tuple per leaf) over trees; return the
-    two result trees.  The split is anchored to ref_tree's treedef — an
-    is_leaf-on-2-tuples heuristic would misfire when the param pytree itself
-    contains tuple nodes."""
-    leaves, treedef = jax.tree_util.tree_flatten(ref_tree)
-    rests = [treedef.flatten_up_to(t) for t in rest_trees]
-    outs = [fn(*args) for args in zip(leaves, *rests)]
-    return (
-        treedef.unflatten([o[0] for o in outs]),
-        treedef.unflatten([o[1] for o in outs]),
-    )
+def _layout_for(*trees) -> ParamLayout:
+    """The layout governing this update: taken from the first FlatBuffer
+    (state/stats built it), else derived from the first pytree."""
+    for t in trees:
+        if is_flat(t):
+            return t.layout
+    for t in trees:
+        if t is not None:
+            return ParamLayout.for_tree(t)
+    raise ValueError("no tree or FlatBuffer to derive a ParamLayout from")
+
+
+def _flat(tree, layout: ParamLayout, dtype=jnp.float32) -> jnp.ndarray:
+    """Raw flat buffer for a pytree or FlatBuffer (packing trees on entry)."""
+    if is_flat(tree):
+        return tree.data
+    return layout.pack(tree, dtype)
+
+
+def _fb(data, layout: ParamLayout) -> FlatBuffer:
+    return FlatBuffer(data, layout)
 
 
 def vr_scale_tree(stats: GradStats, grads, gamma: float, eps: float) -> Tuple[Any, Any]:
-    """Fused (scaled_grads, r) across a pytree (kernel per leaf).
+    """Fused (scaled_grads, r) over the whole parameter set: one launch.
 
     r comes from the group moments; it scales ``grads`` (the possibly
     grad-clipped gradient), matching the jnp path in vrgd._scaled_grads.
+    Returns FlatBuffers (the VR-SGD/Momentum transforms keep state flat).
     """
-    interp = _interpret()
-    return _map_unzip(
-        lambda g, g2, ga: vu.vr_scale(g, g2, gamma, eps, interpret=interp, g_apply=ga),
-        stats.mean, stats.sq_mean, grads,
-    )
+    layout = _layout_for(stats.mean, grads)
+    g = _flat(stats.mean, layout)
+    ga = _flat(grads, layout)
+    g2 = _flat(stats.sq_mean, layout)
+    sg, r = fu.flat_vr_scale(g, ga, g2, layout, gamma=gamma, eps=eps, interpret=_interpret())
+    return _fb(sg, layout), _fb(r, layout)
 
 
 def _bias_corrections(state, b1, b2, b3):
@@ -77,96 +110,98 @@ def _bias_corrections(state, b1, b2, b3):
     return t, pt, 1 - b1**tf, 1 - b2**tf, 1 - b3**ptf
 
 
+def _state_flats(state, layout, state_dtype, keys=("m", "v", "p")):
+    return [_flat(state[k_], layout, jnp.dtype(state_dtype)) for k_ in keys]
+
+
+def _params_flat(params, layout, like):
+    """Packed params for the weight-decay / trust-ratio stream (zeros when
+    the transform was called without params — wd is skipped then)."""
+    return jnp.zeros_like(like) if params is None else _flat(params, layout)
+
+
 def vr_adam_update(
     grads, state, stats: GradStats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
     params, state_dtype: str = "float32",
 ):
-    """Full VR-Adam update via the fused kernel; matches vrgd.vr_adam jnp path."""
-    interp = _interpret()
+    """Full VR-Adam update as one launch; matches vrgd.vr_adam's jnp path."""
     t, pt, bc1, bc2, bc3 = _bias_corrections(state, b1, b2, b3)
-    sd = jnp.dtype(state_dtype)
-
-    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
-    leaves_ga, leaves_g2, leaves_m, leaves_v, leaves_p = _leaves(
-        treedef, grads, stats.sq_mean, state["m"], state["v"], state["p"]
+    layout = _layout_for(state["m"], params, stats.mean)
+    g = _flat(stats.mean, layout)
+    ga = _flat(grads, layout)
+    g2 = _flat(stats.sq_mean, layout)
+    m, v, p = _state_flats(state, layout, state_dtype)
+    w = _params_flat(params, layout, g)
+    use_wd = wd if params is not None else 0.0
+    upd, m2, v2, p2 = fu.flat_vr_adam(
+        g, ga, g2, m, v, p, w, fu._scal8(lr, bc1, bc2, bc3), layout,
+        b1=b1, b2=b2, b3=b3, eps=eps, wd=use_wd, gamma=gamma, gsnr_eps=gsnr_eps,
+        state_dtype=state_dtype, interpret=_interpret(),
     )
-    dirs, ms, vs, ps = [], [], [], []
-    for g, ga, g2, m, v, p in zip(
-        leaves_g, leaves_ga, leaves_g2, leaves_m, leaves_v, leaves_p
-    ):
-        d_, m_, v_, p_ = va.vr_adam_inner(
-            g, g2, m, v, p, bc1, bc2, bc3,
-            b1=b1, b2=b2, b3=b3, eps=eps, gamma=gamma, gsnr_eps=gsnr_eps,
-            interpret=interp, g_apply=ga,
-        )
-        dirs.append(d_)
-        ms.append(m_.astype(sd))
-        vs.append(v_.astype(sd))
-        ps.append(p_.astype(sd))
-    unf = treedef.unflatten
-    d = unf(dirs)
-    if wd and params is not None:
-        d = _tm(lambda d_, p_: d_ + wd * p_, d, params)
-    upd = _tm(lambda d_: -lr * d_, d)
-    new_state = {"step": t, "m": unf(ms), "v": unf(vs), "p": unf(ps), "pt": pt}
-    return upd, new_state
+    new_state = {
+        "step": t, "m": _fb(m2, layout), "v": _fb(v2, layout), "p": _fb(p2, layout), "pt": pt,
+    }
+    return layout.unpack(upd), new_state
 
 
 def vr_lamb_update(
     grads, state, stats: GradStats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
     params, state_dtype: str = "float32",
 ):
-    """Full VR-LAMB update via the fused kernel; matches vrgd.vr_lamb jnp path."""
-    from repro.core.baselines import _lamb_phi
-
-    interp = _interpret()
+    """Full VR-LAMB update as one launch; matches vrgd.vr_lamb's jnp path."""
     t, pt, bc1, bc2, bc3 = _bias_corrections(state, b1, b2, b3)
-    sd = jnp.dtype(state_dtype)
-
-    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
-    leaves_ga, leaves_g2, leaves_m, leaves_v, leaves_p, leaves_w = _leaves(
-        treedef, grads, stats.sq_mean, state["m"], state["v"], state["p"], params
+    layout = _layout_for(state["m"], params, stats.mean)
+    g = _flat(stats.mean, layout)
+    ga = _flat(grads, layout)
+    g2 = _flat(stats.sq_mean, layout)
+    m, v, p = _state_flats(state, layout, state_dtype)
+    w = _params_flat(params, layout, g)
+    upd, m2, v2, p2 = fu.flat_vr_lamb(
+        g, ga, g2, m, v, p, w, fu._scal8(lr, bc1, bc2, bc3), layout,
+        b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
+        state_dtype=state_dtype, interpret=_interpret(),
     )
-    upds, ms, vs, ps = [], [], [], []
-    for g, ga, g2, m, v, p, w in zip(
-        leaves_g, leaves_ga, leaves_g2, leaves_m, leaves_v, leaves_p, leaves_w
-    ):
-        u, m_, v_, p_, u2, w2 = vl.vr_lamb_inner(
-            g, ga, g2, m, v, p, w, bc1, bc2, bc3,
-            b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
-            interpret=interp,
-        )
-        pn, un = jnp.sqrt(w2), jnp.sqrt(u2)
-        ratio = jnp.where((pn > 0) & (un > 0), _lamb_phi(pn) / (un + 1e-12), 1.0)
-        upds.append(-lr * ratio * u)
-        ms.append(m_.astype(sd))
-        vs.append(v_.astype(sd))
-        ps.append(p_.astype(sd))
-    unf = treedef.unflatten
-    new_state = {"step": t, "m": unf(ms), "v": unf(vs), "p": unf(ps), "pt": pt}
-    return unf(upds), new_state
+    new_state = {
+        "step": t, "m": _fb(m2, layout), "v": _fb(v2, layout), "p": _fb(p2, layout), "pt": pt,
+    }
+    return layout.unpack(upd), new_state
 
 
 def vr_lars_update(grads, state, stats: GradStats, lr, mu, wd, trust, gamma, eps, params):
-    """Full VR-LARS update via the fused kernel; matches vrgd.vr_lars jnp path
+    """Full VR-LARS update as one launch; matches vrgd.vr_lars's jnp path
     (vr_scale -> baselines.lars) leaf for leaf."""
-    interp = _interpret()
-    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
-    leaves_ga, leaves_g2, leaves_m, leaves_w = _leaves(
-        treedef, grads, stats.sq_mean, state["m"], params
+    layout = _layout_for(state["m"], params, stats.mean)
+    g = _flat(stats.mean, layout)
+    ga = _flat(grads, layout)
+    g2 = _flat(stats.sq_mean, layout)
+    m = _flat(state["m"], layout)
+    w = _params_flat(params, layout, g)
+    upd, m2 = fu.flat_vr_lars(
+        g, ga, g2, m, w, fu._scal8(lr, gamma), layout,
+        mu=mu, wd=wd, trust=trust, eps=eps, interpret=_interpret(),
     )
-    ms = []
-    for g, ga, g2, m, w in zip(leaves_g, leaves_ga, leaves_g2, leaves_m, leaves_w):
-        u, u2, w2 = vl.vr_lars_inner(
-            g, ga, g2, w, wd=wd, gamma=gamma, eps=eps, interpret=interp
-        )
-        pn, gn = jnp.sqrt(w2), jnp.sqrt(u2)
-        ratio = jnp.where((pn > 0) & (gn > 0), trust * pn / (gn + 1e-12), 1.0)
-        ms.append(mu * m + ratio * u)
-    unf = treedef.unflatten
-    m_new = unf(ms)
-    upd = _tm(lambda m_: -lr * m_, m_new)
-    return upd, {"step": state["step"] + 1, "m": m_new}
+    new_state = {"step": state["step"] + 1, "m": _fb(m2, layout)}
+    return layout.unpack(upd), new_state
+
+
+def lamb_trust_flat(d: FlatBuffer, params, lr, wd):
+    """Stale-GSNR LAMB epilogue on the flat buffer (no kernel launch): the
+    per-leaf trust ratio via a row-wise segment reduction, fully XLA-fused.
+
+    Fresh steps take the 3-phase kernel; stale steps have no Σg² pass to
+    fold in, so plain jnp over ONE flat array is already a single sweep.
+    """
+    from repro.core.baselines import _lamb_phi
+
+    layout = d.layout
+    w = _flat(params, layout) if params is not None else jnp.zeros_like(d.data)
+    u = d.data + wd * w
+    seg_rows = jnp.asarray(layout.row_leaf_ids())
+    u2 = jax.ops.segment_sum(jnp.sum(u * u, axis=1), seg_rows, num_segments=layout.n_leaves)
+    w2 = jax.ops.segment_sum(jnp.sum(w * w, axis=1), seg_rows, num_segments=layout.n_leaves)
+    pn, un = jnp.sqrt(w2), jnp.sqrt(u2)
+    ratio = jnp.where((pn > 0) & (un > 0), _lamb_phi(pn) / (un + 1e-12), 1.0)
+    return layout.unpack(-lr * ratio[seg_rows][:, None] * u)
 
 
 # ---------------------------------------------------------------------------
@@ -174,30 +209,30 @@ def vr_lars_update(grads, state, stats: GradStats, lr, mu, wd, trust, gamma, eps
 # ---------------------------------------------------------------------------
 
 
-def moments_init_tree(params):
-    """Padded (rows x 128) zero carries (g_sum, g2_sum) for the scan."""
-    zeros = _tm(gsk.moments_init, params)
-    return zeros, _tm(jnp.zeros_like, zeros)
+def moments_init_flat(layout: ParamLayout):
+    """Flat zero carries (g_sum, g2_sum) for the accumulation scan."""
+    return layout.zeros(jnp.float32), layout.zeros(jnp.float32)
 
 
-def moments_accum_tree(g_sum, g2_sum, grads):
-    """One fused microbatch update of both moment carries."""
-    interp = _interpret()
-    return _map_unzip(
-        lambda gs, g2s, g: gsk.moments_accum(gs, g2s, g, interpret=interp),
-        g_sum, g2_sum, grads,
-    )
+def moments_accum_flat(g_sum, g2_sum, grads, layout: ParamLayout):
+    """One fused microbatch update of both flat moment carries (one launch);
+    ``grads`` is the raw gradient pytree, packed here (one cheap DMA)."""
+    g = _flat(grads, layout)
+    return fs.flat_moments_accum(g_sum, g2_sum, g, layout, interpret=_interpret())
 
 
-def moments_finalize_tree(g_sum, g2_sum, params, k):
-    """Fused /k normalize, unpadded back to parameter shapes -> (mean, sq_mean)."""
-    interp = _interpret()
-    return _map_unzip(
-        lambda gs, g2s, ref: gsk.moments_finalize(
-            gs, g2s, k, tuple(ref.shape), interpret=interp
-        ),
-        g_sum, g2_sum, params,
-    )
+def moments_finalize_flat(g_sum, g2_sum, k, layout: ParamLayout) -> GradStats:
+    """Fused /k normalize (one launch) -> GradStats carrying FlatBuffers."""
+    mean, sq = fs.flat_moments_finalize(g_sum, g2_sum, k, layout, interpret=_interpret())
+    return GradStats(mean=_fb(mean, layout), sq_mean=_fb(sq, layout), k=k)
+
+
+def vmap_moments_flat(gs_tree, layout: ParamLayout, k: int) -> GradStats:
+    """Batched (k, param) gradient stack -> GradStats in one launch (the
+    vmap stats method; see accumulate.grad_stats)."""
+    gstack = jax.vmap(lambda t: layout.pack(t, jnp.float32))(gs_tree)
+    mean, sq = fs.flat_vmap_moments(gstack, layout, k, interpret=_interpret())
+    return GradStats(mean=_fb(mean, layout), sq_mean=_fb(sq, layout), k=k)
 
 
 def flash_attention(qh, k, v, q_pos=None, k_pos=None, *, causal: bool = True, window: int = 0):

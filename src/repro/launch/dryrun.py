@@ -68,7 +68,9 @@ def build_lowered(cfg, shape, mesh, rules):
 
     if shape.mode == "train":
         loss_fn = make_loss_fn(cfg)
-        opt = make_optimizer(cfg.optimizer)
+        # flat-state runs (cfg.parallel.use_pallas) lower with FlatBuffer
+        # optimizer state — eval_shape sees the packed (rows, 128) buffers
+        opt = make_optimizer(cfg.optimizer, use_pallas=cfg.parallel.use_pallas)
         opt_sds = jax.eval_shape(opt.init, psds)
         opt_shard = param_shardings(opt_sds, rules)
         batch_sds = train_specs(cfg, shape)
@@ -87,7 +89,8 @@ def build_lowered(cfg, shape, mesh, rules):
                 grads, stats = stats_.mean, None
             else:
                 loss, aux, stats = grad_stats(
-                    loss_fn, state.params, batch, k, has_aux=True, method=method
+                    loss_fn, state.params, batch, k, has_aux=True, method=method,
+                    use_pallas=cfg.parallel.use_pallas,
                 )
                 grads = stats.mean
             upd, opt_state = opt.update(grads, state.opt_state, state.params, stats=stats)

@@ -3,6 +3,12 @@
 Leaves are addressed by their tree path; restore requires a structural
 template (an existing TrainState / params tree) so dtypes/shapes are
 validated on load.
+
+Checkpoints always keep the UNPACKED pytree format: FlatBuffer optimizer
+state (core/layout.py) is expanded to its per-parameter leaves at the save
+boundary and re-packed at restore.  Flat-state and pytree-state runs
+therefore produce interchangeable checkpoints — an old pytree checkpoint
+restores into a flat template and vice versa.
 """
 from __future__ import annotations
 
@@ -11,6 +17,8 @@ from typing import Any
 
 import jax
 import numpy as np
+
+from repro.core.layout import FlatBuffer, is_flat, unpack_tree
 
 PyTree = Any
 
@@ -30,10 +38,15 @@ def _path_str(path) -> str:
 
 
 def save(path: str, tree: PyTree) -> None:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(unpack_tree(tree))[0]
     arrays = {}
     for p, leaf in flat:
-        arrays[_path_str(p)] = np.asarray(leaf)
+        a = np.asarray(leaf)
+        if a.dtype.name == "bfloat16":
+            # .npz has no bfloat16; store as f32 (lossless) — restore casts
+            # back to the template leaf's dtype
+            a = a.astype(np.float32)
+        arrays[_path_str(p)] = a
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -41,17 +54,29 @@ def save(path: str, tree: PyTree) -> None:
     os.replace(tmp, path)
 
 
+def _restore_expanded(data, like: PyTree) -> PyTree:
+    """Original leaf-by-leaf restore against a FlatBuffer-free template."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _path_str(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def restore(path: str, like: PyTree) -> PyTree:
     with np.load(path) as data:
-        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-        leaves = []
-        for p, leaf in flat:
-            key = _path_str(p)
-            if key not in data:
-                raise KeyError(f"checkpoint missing leaf {key!r}")
-            arr = data[key]
-            if tuple(arr.shape) != tuple(leaf.shape):
-                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
-            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
-        treedef = jax.tree_util.tree_structure(like)
-        return jax.tree_util.tree_unflatten(treedef, leaves)
+        expanded = _restore_expanded(data, unpack_tree(like))
+    # re-pack the restored subtrees wherever the template holds a FlatBuffer
+    tmpl_leaves, treedef = jax.tree_util.tree_flatten(like, is_leaf=is_flat)
+    parts = treedef.flatten_up_to(expanded)
+    out = [
+        FlatBuffer(t.layout.pack(part, t.dtype), t.layout) if is_flat(t) else part
+        for t, part in zip(tmpl_leaves, parts)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -6,5 +6,13 @@ from typing import Any, NamedTuple
 
 class TrainState(NamedTuple):
     params: Any
-    opt_state: Any
+    opt_state: Any  # flat-state path: m/v/p are FlatBuffer nodes (core/layout.py)
     step: Any  # int32 scalar (mirrors opt_state["step"], kept for convenience)
+
+    def with_unpacked_opt_state(self) -> "TrainState":
+        """TrainState with any FlatBuffer optimizer state expanded back to
+        the plain pytree format (inspection / cross-format comparisons; the
+        checkpoint layer does this automatically at the save boundary)."""
+        from repro.core.layout import unpack_tree
+
+        return self._replace(opt_state=unpack_tree(self.opt_state))

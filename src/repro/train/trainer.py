@@ -43,7 +43,8 @@ def make_train_step(
     use_device_stats = is_vr and opt_cfg.gsnr_source == "data_axis" and mesh is not None
     if use_device_stats:
         stats_fn = device_grad_stats_fn(
-            lambda p, b: loss_fn(p, b), mesh, has_aux=True
+            lambda p, b: loss_fn(p, b), mesh, has_aux=True,
+            flat=cfg.parallel.use_pallas,
         )
 
     def train_step(state: TrainState, batch, with_stats: bool = True) -> Tuple[TrainState, Dict]:
@@ -90,7 +91,11 @@ def init_state(cfg: Config, key=None, params=None) -> TrainState:
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     if params is None:
         params = init_params(cfg.model, key, scan_layers=cfg.parallel.scan_layers)
-    opt = make_optimizer(cfg.optimizer)
+    # use_pallas must thread through here too: the flat-state optimizer's
+    # init produces FlatBuffer moments, and the state structure has to match
+    # the transform make_train_step builds (a pytree-state checkpoint still
+    # restores into either — see train/checkpoint.py).
+    opt = make_optimizer(cfg.optimizer, use_pallas=cfg.parallel.use_pallas)
     opt_state = opt.init(params)
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32))
 

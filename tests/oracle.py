@@ -106,6 +106,175 @@ def property_cases(n: int, seed: int = 0) -> Iterable[dict]:
 
 
 # ---------------------------------------------------------------------------
+# Per-leaf reference dispatch (PR 1's kernels/ops.py loops, kept here as the
+# oracle the single-launch flat path is differentially certified against)
+# ---------------------------------------------------------------------------
+
+
+def _map_unzip(fn, ref_tree, *rest_trees):
+    leaves, treedef = jax.tree_util.tree_flatten(ref_tree)
+    rests = [treedef.flatten_up_to(t) for t in rest_trees]
+    outs = [fn(*args) for args in zip(leaves, *rests)]
+    return (
+        treedef.unflatten([o[0] for o in outs]),
+        treedef.unflatten([o[1] for o in outs]),
+    )
+
+
+def per_leaf_vr_scale(stats, grads, gamma, eps):
+    """Kernel-per-leaf (scaled_grads, r): PR 1's ops.vr_scale_tree."""
+    from repro.kernels import vr_update as vu
+
+    return _map_unzip(
+        lambda g, g2, ga: vu.vr_scale(g, g2, gamma, eps, g_apply=ga),
+        stats.mean, stats.sq_mean, grads,
+    )
+
+
+def per_leaf_vr_adam_update(
+    grads, state, stats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps, params,
+    state_dtype="float32",
+):
+    """Kernel-per-leaf VR-Adam step: PR 1's ops.vr_adam_update."""
+    from repro.kernels import vr_adam as va
+    from repro.kernels.ops import _bias_corrections
+
+    _tm = jax.tree_util.tree_map
+    t, pt, bc1, bc2, bc3 = _bias_corrections(state, b1, b2, b3)
+    sd = jnp.dtype(state_dtype)
+    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
+    rest = [treedef.flatten_up_to(t_) for t_ in
+            (grads, stats.sq_mean, state["m"], state["v"], state["p"])]
+    dirs, ms, vs, ps = [], [], [], []
+    for g, ga, g2, m, v, p in zip(leaves_g, *rest):
+        d_, m_, v_, p_ = va.vr_adam_inner(
+            g, g2, m, v, p, bc1, bc2, bc3,
+            b1=b1, b2=b2, b3=b3, eps=eps, gamma=gamma, gsnr_eps=gsnr_eps, g_apply=ga,
+        )
+        dirs.append(d_); ms.append(m_.astype(sd)); vs.append(v_.astype(sd)); ps.append(p_.astype(sd))
+    unf = treedef.unflatten
+    d = unf(dirs)
+    if wd and params is not None:
+        d = _tm(lambda d_, p_: d_ + wd * p_, d, params)
+    upd = _tm(lambda d_: -lr * d_, d)
+    return upd, {"step": t, "m": unf(ms), "v": unf(vs), "p": unf(ps), "pt": pt}
+
+
+def per_leaf_vr_lamb_update(
+    grads, state, stats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps, params,
+    state_dtype="float32",
+):
+    """Kernel-per-leaf VR-LAMB step: PR 1's ops.vr_lamb_update."""
+    from repro.core.baselines import _lamb_phi
+    from repro.kernels import vr_lamb as vl
+    from repro.kernels.ops import _bias_corrections
+
+    t, pt, bc1, bc2, bc3 = _bias_corrections(state, b1, b2, b3)
+    sd = jnp.dtype(state_dtype)
+    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
+    rest = [treedef.flatten_up_to(t_) for t_ in
+            (grads, stats.sq_mean, state["m"], state["v"], state["p"], params)]
+    upds, ms, vs, ps = [], [], [], []
+    for g, ga, g2, m, v, p, w in zip(leaves_g, *rest):
+        u, m_, v_, p_, u2, w2 = vl.vr_lamb_inner(
+            g, ga, g2, m, v, p, w, bc1, bc2, bc3,
+            b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
+        )
+        pn, un = jnp.sqrt(w2), jnp.sqrt(u2)
+        ratio = jnp.where((pn > 0) & (un > 0), _lamb_phi(pn) / (un + 1e-12), 1.0)
+        upds.append(-lr * ratio * u)
+        ms.append(m_.astype(sd)); vs.append(v_.astype(sd)); ps.append(p_.astype(sd))
+    unf = treedef.unflatten
+    return unf(upds), {"step": t, "m": unf(ms), "v": unf(vs), "p": unf(ps), "pt": pt}
+
+
+def per_leaf_vr_lars_update(grads, state, stats, lr, mu, wd, trust, gamma, eps, params):
+    """Kernel-per-leaf VR-LARS step: PR 1's ops.vr_lars_update."""
+    from repro.kernels import vr_lamb as vl
+
+    leaves_g, treedef = jax.tree_util.tree_flatten(stats.mean)
+    rest = [treedef.flatten_up_to(t_) for t_ in (grads, stats.sq_mean, state["m"], params)]
+    ms = []
+    for g, ga, g2, m, w in zip(leaves_g, *rest):
+        u, u2, w2 = vl.vr_lars_inner(g, ga, g2, w, wd=wd, gamma=gamma, eps=eps)
+        pn, gn = jnp.sqrt(w2), jnp.sqrt(u2)
+        ratio = jnp.where((pn > 0) & (gn > 0), trust * pn / (gn + 1e-12), 1.0)
+        ms.append(mu * m + ratio * u)
+    m_new = treedef.unflatten(ms)
+    upd = jax.tree_util.tree_map(lambda m_: -lr * m_, m_new)
+    return upd, {"step": state["step"] + 1, "m": m_new}
+
+
+def unpack_state(state):
+    """Optimizer state with any FlatBuffer moments expanded to pytrees."""
+    from repro.core.layout import unpack_tree
+
+    return unpack_tree(state)
+
+
+def hostile_params(seed: int = 0, dtype=jnp.float32):
+    """A param tree whose leaves sweep the hostile shape grid (non-aligned,
+    multi-block, partial edge blocks) including a tuple-valued node."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(SHAPES))
+    leaves = [
+        (jax.random.normal(k_, s) * 0.5).astype(dtype) for k_, s in zip(ks, SHAPES)
+    ]
+    return {"a": leaves[0], "pair": (leaves[1], leaves[2]), "b": leaves[3],
+            "c": {"d": leaves[4], "e": leaves[5]}, "f": leaves[6]}
+
+
+def run_flat_vs_per_leaf(
+    name: str,
+    steps: int = 2,
+    state_dtype: str = "float32",
+    gamma: float = 0.1,
+    clip_scale=None,
+    lr: float = 0.01,
+    wd: float = 0.01,
+    seed: int = 0,
+):
+    """Step the flat single-launch transform against the PR 1 per-leaf kernel
+    dispatch in lockstep over the hostile-shape param tree.
+
+    Returns (upd_per_leaf, upd_flat, state_per_leaf, state_flat_unpacked).
+    """
+    from repro.configs.base import OptimizerConfig
+    from repro.core import GradStats, make_optimizer
+
+    params = hostile_params(seed)
+    _tm = jax.tree_util.tree_map
+    gmean = _tm(lambda x: x * 0.01, params)
+    sq = _tm(lambda x: jnp.square(x) + 1e-3, gmean)
+    stats = GradStats(mean=gmean, sq_mean=sq, k=8)
+    grads = gmean if clip_scale is None else _tm(lambda x: x * clip_scale, gmean)
+    cfg = OptimizerConfig(name=name, lr=lr, schedule="constant", weight_decay=wd,
+                          gamma=gamma, state_dtype=state_dtype)
+    o_f = make_optimizer(cfg, use_pallas=True)
+    s_f = o_f.init(params)
+    # per-leaf reference state: plain pytree moments in state_dtype
+    sd = jnp.dtype(state_dtype)
+    z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
+    zero = jnp.zeros((), jnp.int32)
+    if name == "vr_lars":
+        s_r = {"step": zero, "m": _tm(lambda x: jnp.zeros(x.shape, jnp.float32), params)}
+        ref_update = lambda s: per_leaf_vr_lars_update(
+            grads, s, stats, lr, 0.9, wd, 0.001, gamma, 1e-12, params)
+    elif name == "vr_adam":
+        s_r = {"step": zero, "pt": zero, "m": z(), "v": z(), "p": z()}
+        ref_update = lambda s: per_leaf_vr_adam_update(
+            grads, s, stats, lr, 0.9, 0.999, 0.9, 1e-6, wd, gamma, 1e-12, params, state_dtype)
+    else:  # vr_lamb
+        s_r = {"step": zero, "pt": zero, "m": z(), "v": z(), "p": z()}
+        ref_update = lambda s: per_leaf_vr_lamb_update(
+            grads, s, stats, lr, 0.9, 0.999, 0.9, 1e-6, wd, gamma, 1e-12, params, state_dtype)
+    u_r = u_f = None
+    for _ in range(steps):
+        u_r, s_r = ref_update(s_r)
+        u_f, s_f = o_f.update(grads, s_f, params, stats=stats)
+    return u_r, u_f, s_r, unpack_state(s_f)
+
+
+# ---------------------------------------------------------------------------
 # Transform-level differential runner (make_optimizer jnp vs Pallas)
 # ---------------------------------------------------------------------------
 

@@ -35,6 +35,20 @@ for fused in (True, False):
     assert np.allclose(s1.sq_mean["w"], s2.sq_mean["w"], rtol=1e-4, atol=1e-6)
     assert s1.k == 8
 
+# flat path: stats arrive as FlatBuffers, identical statistics, and the
+# single all-reduce runs over the contiguous flat carry (no stacked tree copy)
+f = jax.jit(device_grad_stats_fn(loss_fn, mesh, flat=True))
+l3, _, s3 = f(params, (X, Y))
+_, _, s2 = grad_stats(loss_fn, params, (X, Y), 8)
+from repro.core.layout import is_flat
+assert is_flat(s3.mean) and is_flat(s3.sq_mean)
+s3t = s3.as_tree()
+assert np.allclose(s3t.mean["w"], s2.mean["w"], rtol=1e-4, atol=1e-6)
+assert np.allclose(s3t.sq_mean["w"], s2.sq_mean["w"], rtol=1e-4, atol=1e-6)
+txt = f.lower(params, (X, Y)).compile().as_text()
+n_ar = txt.count(" all-reduce(")
+assert n_ar <= 2, f"expected one flat stats reduction, got {n_ar} all-reduces"
+
 # fused path emits exactly ONE all-reduce for the stats payload
 txt = jax.jit(device_grad_stats_fn(loss_fn, mesh, fused=True)).lower(params, (X, Y)).compile().as_text()
 n_ar = txt.count(" all-reduce(")

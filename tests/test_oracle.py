@@ -127,6 +127,9 @@ VR_NAMES = ("vr_sgd", "vr_momentum", "vr_adam", "vr_lars", "vr_lamb")
 def test_transform_pallas_matches_jnp(name):
     u_j, u_k, s_j, s_k = oracle.run_transform_pair(name, steps=3, clip_scale=0.37)
     oracle.assert_trees_close(u_k, u_j, msg=name, atol=1e-5, rtol=1e-3)
+    # the flat path stores moments as FlatBuffers; unpacked leaves must come
+    # back in the same dtype the jnp state carries
+    s_k = oracle.unpack_state(s_k)
     for a, b in zip(jax.tree_util.tree_leaves(s_j), jax.tree_util.tree_leaves(s_k)):
         assert a.dtype == b.dtype, (name, a.dtype, b.dtype)
 
@@ -138,7 +141,8 @@ def test_transform_bf16_state_dtype(name):
     u_j, u_k, s_j, s_k = oracle.run_transform_pair(name, steps=3, state_dtype="bfloat16")
     oracle.assert_trees_close(u_k, u_j, msg=name, atol=2e-2, rtol=2e-2)
     for part in ("m", "v", "p"):
-        for leaf in jax.tree_util.tree_leaves(s_k[part]):
+        assert s_k[part].dtype == jnp.bfloat16, (name, part, s_k[part].dtype)
+        for leaf in jax.tree_util.tree_leaves(s_k[part].unpack()):
             assert leaf.dtype == jnp.bfloat16, (name, part, leaf.dtype)
 
 
@@ -157,6 +161,50 @@ def test_stale_gsnr_steps_agree(name):
     oracle.assert_trees_close(u_k, u_j, msg=f"{name} stale", atol=1e-5, rtol=1e-4)
     assert int(s_k["pt"]) == 2 and int(s_k["step"]) == 4
     assert int(s_j["pt"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# flat single-launch path vs the PR 1 per-leaf kernel dispatch (the per-leaf
+# loops live on in tests/oracle.py as the reference implementation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ("vr_adam", "vr_lamb", "vr_lars"))
+@pytest.mark.parametrize("clip", (None, 0.37), ids=("noclip", "clip"))
+def test_flat_matches_per_leaf_kernels(name, clip):
+    """The one-pallas_call flat update must agree with the kernel-per-leaf
+    dispatch leaf for leaf over the hostile shape grid (non-tile-aligned
+    leaves, partial edge blocks, tuple-valued pytree nodes)."""
+    u_r, u_f, s_r, s_f = oracle.run_flat_vs_per_leaf(name, steps=2, clip_scale=clip)
+    oracle.assert_trees_close(u_f, u_r, msg=f"{name} upd", atol=1e-5, rtol=1e-3)
+    for part in ("m", "v", "p") if name != "vr_lars" else ("m",):
+        oracle.assert_trees_close(
+            s_f[part], s_r[part], msg=f"{name} {part}", atol=1e-5, rtol=1e-3
+        )
+
+
+@pytest.mark.parametrize("name", ("vr_adam", "vr_lamb"))
+def test_flat_matches_per_leaf_bf16_state(name):
+    u_r, u_f, s_r, s_f = oracle.run_flat_vs_per_leaf(name, steps=2, state_dtype="bfloat16")
+    oracle.assert_trees_close(u_f, u_r, msg=f"{name} bf16 upd", atol=2e-2, rtol=2e-2)
+    for leaf in jax.tree_util.tree_leaves(s_f["m"]):
+        assert leaf.dtype == jnp.bfloat16
+
+
+def test_flat_scale_matches_per_leaf_kernels():
+    """flat_vr_scale vs kernel-per-leaf vr_scale on the hostile param tree."""
+    from repro.core import GradStats
+    from repro.kernels import ops as kops
+
+    params = oracle.hostile_params(seed=3)
+    g = jax.tree_util.tree_map(lambda x: x * 0.02, params)
+    sq = jax.tree_util.tree_map(lambda x: jnp.square(x) + 1e-3, g)
+    stats = GradStats(mean=g, sq_mean=sq, k=8)
+    ga = jax.tree_util.tree_map(lambda x: x * 0.7, g)
+    sg_f, r_f = kops.vr_scale_tree(stats, ga, 0.1, 1e-12)
+    sg_r, r_r = oracle.per_leaf_vr_scale(stats, ga, 0.1, 1e-12)
+    oracle.assert_trees_close(sg_f.unpack(), sg_r, msg="sg", atol=1e-6, rtol=1e-4)
+    oracle.assert_trees_close(r_f.unpack(), r_r, msg="r", atol=1e-6, rtol=1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -181,22 +229,25 @@ def test_fused_grad_stats_matches_jnp_scan():
     l2, a2, s2 = grad_stats(_quad_loss, params, (X, Y), 8, has_aux=True, use_pallas=True)
     np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(a1["mae"]), np.asarray(a2["mae"]), rtol=1e-6)
-    oracle.assert_trees_close(s2.mean, s1.mean, msg="mean", atol=1e-7, rtol=1e-5)
-    oracle.assert_trees_close(s2.sq_mean, s1.sq_mean, msg="sq_mean", atol=1e-7, rtol=1e-5)
+    s2t = s2.as_tree()  # flat path carries FlatBuffer stats
+    oracle.assert_trees_close(s2t.mean, s1.mean, msg="mean", atol=1e-7, rtol=1e-5)
+    oracle.assert_trees_close(s2t.sq_mean, s1.sq_mean, msg="sq_mean", atol=1e-7, rtol=1e-5)
     assert s2.k == s1.k == 8
 
 
 def test_fused_paths_with_tuple_pytree():
-    """Param pytrees containing tuple nodes must not confuse the pair
-    splitting in kernels/ops.py (a 2-tuple param tree once scrambled Σg and
-    Σg² across leaves — the split is now anchored to the tree structure)."""
-    from repro.core import GradStats
+    """Param pytrees containing tuple nodes must not confuse the flat packing
+    (a 2-tuple param tree once scrambled Σg and Σg² across leaves in the old
+    per-leaf dispatch — the ParamLayout is anchored to the tree structure)."""
+    from repro.core import GradStats, ParamLayout
     from repro.kernels import ops as kops
 
     g = (jnp.full((4,), 2.0), jnp.full((3, 3), 3.0))  # params tree IS a 2-tuple
-    g_sum, g2_sum = kops.moments_init_tree(g)
-    g_sum, g2_sum = kops.moments_accum_tree(g_sum, g2_sum, g)
-    mean, sq = kops.moments_finalize_tree(g_sum, g2_sum, g, 1)
+    layout = ParamLayout.for_tree(g)
+    g_sum, g2_sum = kops.moments_init_flat(layout)
+    g_sum, g2_sum = kops.moments_accum_flat(g_sum, g2_sum, g, layout)
+    stats1 = kops.moments_finalize_flat(g_sum, g2_sum, 1, layout)
+    mean, sq = stats1.mean.unpack(), stats1.sq_mean.unpack()
     np.testing.assert_allclose(np.asarray(mean[0]), 2.0)
     np.testing.assert_allclose(np.asarray(mean[1]), 3.0)
     np.testing.assert_allclose(np.asarray(sq[0]), 4.0)
@@ -205,7 +256,8 @@ def test_fused_paths_with_tuple_pytree():
     stats = GradStats(
         mean=g, sq_mean=jax.tree_util.tree_map(lambda x: jnp.square(x) + 0.1, g), k=4
     )
-    sg, r = kops.vr_scale_tree(stats, g, 0.1, 1e-12)
+    sg_fb, r_fb = kops.vr_scale_tree(stats, g, 0.1, 1e-12)
+    sg = sg_fb.unpack()
     want0, _ = ref.vr_scale_ref(g[0], stats.sq_mean[0], 0.1, 1e-12)
     want1, _ = ref.vr_scale_ref(g[1], stats.sq_mean[1], 0.1, 1e-12)
     np.testing.assert_allclose(np.asarray(sg[0]), np.asarray(want0), rtol=1e-5)
