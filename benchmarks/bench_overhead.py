@@ -177,9 +177,16 @@ def flat_vs_per_leaf(fast: bool) -> dict:
         "flat_vs_per_leaf_ratio", 0.0,
         f"flat/per_leaf={dt_flat/dt_leaf:.3f};launches {n_flat} vs {n_leafcalls} (TPU is the real number)",
     )
+    from repro.kernels.ops import _interpret
+
     return {
         "optimizer": "vr_lamb",
         "n_leaves": n_leaves,
+        # interpret=True means the latency numbers are CPU-interpret (structural
+        # only); TPU reruns write interpret=False, so the perf trajectory can
+        # never silently mix interpreter and hardware measurements.
+        "interpret": _interpret(),
+        "backend": jax.default_backend(),
         "flat": {"launches": n_flat, "us_per_step": dt_flat * 1e6},
         "per_leaf": {"launches": n_leafcalls, "us_per_step": dt_leaf * 1e6},
         "note": "CPU interpret mode: latency is structural only; launch counts are hardware-independent",

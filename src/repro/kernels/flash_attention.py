@@ -1,15 +1,30 @@
-"""Pallas TPU kernel: causal / sliding-window flash attention (GQA-aware).
+"""Pallas TPU kernel: causal / sliding-window flash attention (GQA-aware),
+with a custom VJP so the TRAINING forward runs on the fused path too.
 
-Grid (B, H, nq, nk) with the kv dim innermost: the output block for
+Forward grid (B, H, nq, nk) with the kv dim innermost: the output block for
 (b, h, iq) is revisited across ik while running max / denominator /
 accumulator live in VMEM scratch — the classic online-softmax pipeline,
-MXU-fed by (BLOCK_Q x D) @ (D x BLOCK_K) tiles.
+MXU-fed by (BLOCK_Q x D) @ (D x BLOCK_K) tiles.  When the call is being
+differentiated the forward additionally emits the LSE residual
+``lse[b, h, i] = m_i + log l_i`` per query row — the only extra tensor the
+recomputation-based FlashAttention-2 backward needs (Dao 2023, Alg. 2).
+The backward kernels live in kernels/flash_attention_bwd.py.
 
 GQA: the kv-head index is h // (H // KV) inside the BlockSpec index maps, so
 grouped queries stream the same k/v tiles without materializing the repeat.
 
+Masking convention: a query row with NO valid kv position (e.g. sliding
+windows past the end of a shorter kv sequence) produces EXACTLY zero output
+and ``lse = NEG_INF`` — not the `acc / max(l, eps)` garbage of a clamped
+divide.  ref.attention_ref is the oracle and shares the convention.
+
+Autodiff composes to arbitrary order: first-order grads run the fused Pallas
+backward; the Pallas entry points carry jnp-replica VJPs so jax.grad twice
+(and jvp-of-vjp) falls back to differentiable jnp math instead of hitting a
+non-differentiable pallas_call.
+
 Positions are implicit (training layout): q_pos = arange(S), k_pos =
-arange(Skv).  ref.attention_ref is the oracle.
+arange(Skv).
 """
 from __future__ import annotations
 
@@ -25,11 +40,72 @@ DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
 
+def tile_mask(iq, ik, block_q: int, block_k: int, seq_kv: int,
+              causal: bool, window: int, seq_q: int | None = None):
+    """(block_q, block_k) validity mask for one (iq, ik) tile — THE masking
+    rule, shared by the forward and backward kernels so the backward's
+    softmax recompute p = exp(s - lse) can never drift from the mask the
+    forward's lse was built under.  seq_q=None skips the q-side bound (the
+    forward's per-row outputs are dropped on copy-back; the backward reduces
+    across q rows and must exclude out-of-range rows of partial blocks)."""
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_kv  # partial-block bounds
+    if seq_q is not None:
+        mask &= qpos < seq_q
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def zero_oob_rows(x, i, block: int, seq: int):
+    """Zero rows of a (block, d) tile beyond ``seq`` (interpret mode pads
+    partial blocks with NaN; 0 * NaN would poison the MXU accumulations).
+    Returns (x_zeroed, (block, 1) validity column)."""
+    valid = i * block + jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], 1), 0) < seq
+    return jnp.where(valid, x, 0.0), valid
+
+
+def tile_reachable(iq, ik, block_q: int, block_k: int, causal: bool, window: int):
+    """Scalar predicate: can ANY (q, k) pair in tile (iq, ik) be unmasked?
+
+    Computable from grid indices alone — causal kills tiles strictly above
+    the diagonal, a sliding window kills tiles strictly left of it (for
+    causal attention roughly half the grid; for small windows almost all of
+    it).  Partial-block bounds never kill a whole tile (the grid is cdiv-
+    sized).  Returns None when the tile grid is statically dense, so callers
+    can skip the pl.when entirely."""
+    ok = None
+    if causal:  # earliest k in tile vs latest q in tile
+        ok = ik * block_k <= iq * block_q + (block_q - 1)
+    if window > 0:  # latest k in tile vs the window's left edge for latest q
+        c = ik * block_k + (block_k - 1) > iq * block_q - window
+        ok = c if ok is None else ok & c
+    return ok
+
+
+def _maybe_skip_dead_tile(compute, iq, ik, block_q: int, block_k: int,
+                          causal: bool, window: int):
+    """Run ``compute`` only on reachable tiles (scratch accumulators are
+    simply left untouched on dead ones)."""
+    live = tile_reachable(iq, ik, block_q, block_k, causal, window)
+    if live is None:
+        compute()
+    else:
+        pl.when(live)(compute)
+
+
 def _kernel(
-    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-    *, causal: bool, window: int, block_q: int, block_k: int, scale: float,
-    seq_kv: int,
+    q_ref, k_ref, v_ref, *rest,
+    causal: bool, window: int, block_q: int, block_k: int, scale: float,
+    seq_kv: int, with_lse: bool,
 ):
+    if with_lse:
+        o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        (o_ref, m_scr, l_scr, acc_scr) = rest
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -40,44 +116,155 @@ def _kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (BQ, D)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (BK, D)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)
-    # zero out-of-bounds kv rows of partial blocks (interpret mode pads with
-    # NaN; 0 * NaN would poison the p @ v accumulation)
-    kv_valid = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0) < seq_kv
-    k = jnp.where(kv_valid, k, 0.0)
-    v = jnp.where(kv_valid, v, 0.0)
-    s = jax.lax.dot_general(
-        q * scale, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (BQ, BK)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (BQ, D)
+        k, _ = zero_oob_rows(k_ref[0, :, 0, :].astype(jnp.float32), ik, block_k, seq_kv)
+        v, _ = zero_oob_rows(v_ref[0, :, 0, :].astype(jnp.float32), ik, block_k, seq_kv)
+        s = jax.lax.dot_general(
+            q * scale, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (BQ, BK)
 
-    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    mask = kpos < seq_kv  # partial-block bounds
-    if causal:
-        mask &= kpos <= qpos
-    if window > 0:
-        mask &= kpos > qpos - window
-    s = jnp.where(mask, s, NEG_INF)
+        mask = tile_mask(iq, ik, block_q, block_k, seq_kv, causal, window)
+        s = jnp.where(mask, s, NEG_INF)
 
-    m_prev = m_scr[...]
-    l_prev = l_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    corr = jnp.exp(m_prev - m_new)
-    l_new = l_prev * corr + jnp.sum(p, axis=1)
-    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    m_scr[...] = m_new
-    l_scr[...] = l_new
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        # exact zeros for masked entries: a fully-masked row has s == m ==
+        # NEG_INF everywhere, where exp(s - m) would be 1 and the row would
+        # silently turn into a uniform average over kv — the l stays 0 so
+        # _finalize can emit 0.
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    _maybe_skip_dead_tile(_compute, iq, ik, block_q, block_k, causal, window)
 
     @pl.when(ik == nk - 1)
     def _finalize():
-        o_ref[0, :, 0, :] = (
-            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        l = l_scr[...]
+        valid = l > 0.0  # rows with at least one unmasked kv position
+        o_ref[0, :, 0, :] = jnp.where(
+            valid[:, None], acc_scr[...] / jnp.maximum(l, 1e-30)[:, None], 0.0
         ).astype(o_ref.dtype)
+        if with_lse:
+            lse_ref[0, 0, :] = jnp.where(
+                valid, m_scr[...] + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF
+            )
+
+
+def _fwd_call(q, k, v, *, causal, window, block_q, block_k, interpret, with_lse):
+    """One pallas_call: out (B,S,H,D) [+ lse (B,H,S) f32 when with_lse]."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_k)
+    scale = d**-0.5
+
+    out_shape = [jax.ShapeDtypeStruct((b, sq, h, d), q.dtype)]
+    out_specs = [pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0))]
+    if with_lse:
+        out_shape.append(jax.ShapeDtypeStruct((b, h, sq), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik: (b_, h_, iq)))
+    outs = pl.pallas_call(
+        functools.partial(
+            _kernel, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, scale=scale, seq_kv=skv,
+            with_lse=with_lse,
+        ),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return tuple(outs) if with_lse else (outs[0],)
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(causal: bool, window: int, block_q: int, block_k: int, interpret: bool):
+    """custom_vjp'd flash attention for one static config.
+
+    Three nested custom_vjp layers keep every pallas_call out of autodiff's
+    reach while staying differentiable to arbitrary order:
+
+      flash     primal: fused fwd (no LSE).  vjp: fused bwd via _bwd_p.
+      _fwd_p    primal: fused fwd emitting LSE (the residual producer).
+                vjp (2nd order+): jnp replica attention_fwd_ref.
+      _bwd_p    primal: fused dq + dk/dv kernels.
+                vjp (2nd order+): jnp replica attention_bwd_ref.
+    """
+    from repro.kernels import flash_attention_bwd as fab
+
+    kw = dict(causal=causal, window=window, block_q=block_q, block_k=block_k,
+              interpret=interpret)
+
+    @jax.custom_vjp
+    def _fwd_p(q, k, v):
+        return _fwd_call(q, k, v, with_lse=True, **kw)
+
+    def _fwd_p_fwd(q, k, v):
+        return _fwd_p(q, k, v), (q, k, v)
+
+    def _fwd_p_bwd(res, ct):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: fab.attention_fwd_ref(q_, k_, v_, causal=causal, window=window),
+            q, k, v,
+        )
+        return vjp(ct)
+
+    _fwd_p.defvjp(_fwd_p_fwd, _fwd_p_bwd)
+
+    @jax.custom_vjp
+    def _bwd_p(q, k, v, lse, delta, do):
+        return fab.flash_attention_bwd(q, k, v, lse, delta, do, **kw)
+
+    def _bwd_p_fwd(q, k, v, lse, delta, do):
+        return _bwd_p(q, k, v, lse, delta, do), (q, k, v, lse, delta, do)
+
+    def _bwd_p_bwd(res, ct):
+        _, vjp = jax.vjp(
+            lambda *a: fab.attention_bwd_ref(*a, causal=causal, window=window), *res
+        )
+        return vjp(ct)
+
+    _bwd_p.defvjp(_bwd_p_fwd, _bwd_p_bwd)
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        return _fwd_call(q, k, v, with_lse=False, **kw)[0]
+
+    def flash_fwd(q, k, v):
+        out, lse = _fwd_p(q, k, v)
+        return out, (q, k, v, out, lse)
+
+    def flash_bwd(res, do):
+        q, k, v, out, lse = res
+        # FlashAttention-2 preprocess: delta_i = <dO_i, O_i> — one cheap
+        # element-wise jnp pass (XLA fuses it), not a kernel launch.
+        delta = jnp.einsum(
+            "bshd,bshd->bhs", do.astype(jnp.float32), out.astype(jnp.float32)
+        )
+        return _bwd_p(q, k, v, lse, delta, do)
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
 
 
 @functools.partial(
@@ -94,35 +281,9 @@ def flash_attention(
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """q: (B,S,H,D); k,v: (B,Skv,KV,D) -> (B,S,H,D)."""
+    """q: (B,S,H,D); k,v: (B,Skv,KV,D) -> (B,S,H,D).  Differentiable."""
     b, sq, h, d = q.shape
-    skv, kvh = k.shape[1], k.shape[2]
-    g = h // kvh
+    skv = k.shape[1]
     block_q = min(block_q, sq)
     block_k = min(block_k, skv)
-    nq = -(-sq // block_q)
-    nk = -(-skv // block_k)
-    scale = d**-0.5
-
-    grid = (b, h, nq, nk)
-    out = pl.pallas_call(
-        functools.partial(
-            _kernel, causal=causal, window=window,
-            block_q=block_q, block_k=block_k, scale=scale, seq_kv=skv,
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v)
-    return out
+    return _flash_fn(causal, window, block_q, block_k, interpret)(q, k, v)

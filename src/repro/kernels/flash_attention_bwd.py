@@ -1,0 +1,228 @@
+"""Pallas TPU kernels: recomputation-based flash-attention backward
+(FlashAttention-2, Dao 2023, Alg. 2), GQA-aware, plus the differentiable jnp
+replicas used as the second-order VJP fallback and as oracles.
+
+Residual contract (from kernels/flash_attention.py): per query row
+``lse = m + log l`` (NEG_INF for rows with no valid kv) and the jnp
+preprocess ``delta_i = <dO_i, O_i>``, both shaped (B, H, S) f32.  With p
+recomputed as ``exp(scale * q k^T - lse)`` (already softmax-normalized):
+
+    dv_j = sum_i p_ij dO_i
+    dp_ij = dO_i . v_j
+    dS_ij = p_ij (dp_ij - delta_i) * scale
+    dq_i = sum_j dS_ij k_j           dk_j = sum_i dS_ij q_i
+
+Two kernels, mirroring the FA-2 grid split:
+
+  * dq:      grid (B, H, nq, nk), kv innermost — each q block owns a dq
+             accumulator in VMEM scratch and sweeps kv blocks.
+  * dk/dv:   grid (B, KV, nk, G*nq), the inner dim walking every
+             (group member, q block) pair — each kv block owns dk/dv
+             accumulators and the GQA group-sum happens in the same sweep,
+             so outputs land directly in the (B, Skv, KV, D) kv-head shape
+             with no (B, Skv, H, D) intermediate.
+
+Masking matches the forward (causal / sliding window / partial kv blocks)
+plus a q-side bound: out-of-range q rows of partial edge blocks are zeroed
+and masked so they contribute nothing to the dk/dv reductions (interpret
+mode pads partial blocks with NaN; the forward never had to care because
+its per-row outputs are simply dropped on copy-back).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# the masking rule and OOB zeroing are SHARED with the forward kernel: the
+# backward's softmax recompute p = exp(s - lse) is only valid against the
+# exact mask the forward's lse was built under
+from repro.kernels.flash_attention import (
+    NEG_INF,
+    _maybe_skip_dead_tile,
+    tile_mask,
+    zero_oob_rows,
+)
+# the LSE-emitting jnp forward replica IS the naive attention oracle
+# (kernels/ref.py) — one masked-softmax implementation; re-exported so the
+# custom-VJP wiring reads fab.attention_fwd_ref next to fab.attention_bwd_ref
+from repro.kernels import ref as rf
+from repro.kernels.ref import attention_fwd_ref  # noqa: F401
+
+
+def _dot(a, b, dims):
+    return jax.lax.dot_general(a, b, (dims, ((), ())), preferred_element_type=jnp.float32)
+
+
+def _load_q_side(q_ref, do_ref, lse_ref, delta_ref, iq, block_q, seq_q):
+    """Sanitized q-side streams: OOB rows of partial q blocks zeroed."""
+    q, q_valid = zero_oob_rows(q_ref[0, :, 0, :].astype(jnp.float32), iq, block_q, seq_q)
+    do, _ = zero_oob_rows(do_ref[0, :, 0, :].astype(jnp.float32), iq, block_q, seq_q)
+    lse = jnp.where(q_valid[:, 0], lse_ref[0, 0, :], 0.0)
+    delta = jnp.where(q_valid[:, 0], delta_ref[0, 0, :], 0.0)
+    return q, do, lse, delta
+
+
+def _load_kv_side(k_ref, v_ref, ik, block_k, seq_kv):
+    k, _ = zero_oob_rows(k_ref[0, :, 0, :].astype(jnp.float32), ik, block_k, seq_kv)
+    v, _ = zero_oob_rows(v_ref[0, :, 0, :].astype(jnp.float32), ik, block_k, seq_kv)
+    return k, v
+
+
+def _p_ds(q, k, v, do, lse, delta, mask, scale):
+    """Shared recompute: (p, dS) for one (BQ, BK) tile."""
+    s = _dot(q * scale, k, ((1,), (1,)))  # (BQ, BK)
+    s = jnp.where(mask, s, NEG_INF)
+    # exact zeros off-mask; fully-masked rows carry lse == NEG_INF and
+    # s == NEG_INF, so s - lse == 0 stays finite before the where kills it.
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+    dp = _dot(do, v, ((1,), (1,)))  # (BQ, BK)
+    ds = p * (dp - delta[:, None]) * scale
+    return p, ds
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, lse_ref, delta_ref, do_ref, dq_ref, dq_scr,
+    *, causal: bool, window: int, block_q: int, block_k: int, scale: float,
+    seq_q: int, seq_kv: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    def _compute():
+        q, do, lse, delta = _load_q_side(q_ref, do_ref, lse_ref, delta_ref, iq, block_q, seq_q)
+        k, v = _load_kv_side(k_ref, v_ref, ik, block_k, seq_kv)
+        mask = tile_mask(iq, ik, block_q, block_k, seq_kv, causal, window, seq_q=seq_q)
+        _, ds = _p_ds(q, k, v, do, lse, delta, mask, scale)
+        dq_scr[...] += _dot(ds, k, ((1,), (0,)))  # (BQ, D)
+
+    _maybe_skip_dead_tile(_compute, iq, ik, block_q, block_k, causal, window)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref, lse_ref, delta_ref, do_ref, dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, causal: bool, window: int, block_q: int, block_k: int, scale: float,
+    seq_q: int, seq_kv: int, nq: int, g: int,
+):
+    ik = pl.program_id(2)
+    t = pl.program_id(3)  # inner sweep over (group member, q block) pairs
+    iq = t % nq
+
+    @pl.when(t == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    def _compute():
+        q, do, lse, delta = _load_q_side(q_ref, do_ref, lse_ref, delta_ref, iq, block_q, seq_q)
+        k, v = _load_kv_side(k_ref, v_ref, ik, block_k, seq_kv)
+        mask = tile_mask(iq, ik, block_q, block_k, seq_kv, causal, window, seq_q=seq_q)
+        p, ds = _p_ds(q, k, v, do, lse, delta, mask, scale)
+        dv_scr[...] += _dot(p, do, ((0,), (0,)))  # (BK, D)
+        dk_scr[...] += _dot(ds, q, ((0,), (0,)))  # (BK, D)
+
+    _maybe_skip_dead_tile(_compute, iq, ik, block_q, block_k, causal, window)
+
+    @pl.when(t == g * nq - 1)
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, lse, delta, do,
+    *, causal: bool, window: int, block_q: int, block_k: int, interpret: bool,
+):
+    """Fused backward: (dq, dk, dv) in two pallas_calls.
+
+    q/do: (B,S,H,D); k/v: (B,Skv,KV,D); lse/delta: (B,H,S) f32.
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_k)
+    scale = d**-0.5
+    kw = dict(causal=causal, window=window, block_q=block_q, block_k=block_k,
+              scale=scale, seq_q=sq, seq_kv=skv)
+
+    q_spec = pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0))
+    kv_spec = pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0))
+    row_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik: (b_, h_, iq))
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **kw),
+        grid=(b, h, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, row_spec, row_spec, q_spec],
+        out_specs=pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, lse, delta, do)
+
+    # inner grid dim t = ig * nq + iq walks every query head of the GQA group
+    # (head index j*g + t//nq) and every q block; the kv block (b, ik, j) is
+    # revisited for the whole sweep while dk/dv accumulate in scratch.
+    q_spec2 = pl.BlockSpec(
+        (1, block_q, 1, d), lambda b_, j, ik, t: (b_, t % nq, j * g + t // nq, 0)
+    )
+    kv_spec2 = pl.BlockSpec((1, block_k, 1, d), lambda b_, j, ik, t: (b_, ik, j, 0))
+    row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, j, ik, t: (b_, j * g + t // nq, t % nq))
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, nq=nq, g=g, **kw),
+        grid=(b, kvh, nk, g * nq),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, row_spec2, row_spec2, q_spec2],
+        out_specs=[kv_spec2, kv_spec2],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, skv, kvh, d), k.dtype),
+            jax.ShapeDtypeStruct((b, skv, kvh, d), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lse, delta, do)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# differentiable jnp replicas: second-order VJP fallback + oracles
+# ---------------------------------------------------------------------------
+
+
+def attention_bwd_ref(q, k, v, lse, delta, do, *, causal: bool, window: int = 0):
+    """jnp replica of the fused backward (differentiable; the 2nd-order path).
+
+    Same inputs as flash_attention_bwd; returns (dq, dk, dv) in input dtypes.
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = d**-0.5
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, g, d)
+    dof = do.astype(jnp.float32).reshape(b, sq, kvh, g, d)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    mask = rf.attention_mask_2d(sq, skv, causal, window)[None, None, None]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    lse_r = lse.reshape(b, kvh, g, sq)
+    p = jnp.where(mask, jnp.exp(s - lse_r[..., None]), 0.0)
+    dv = jnp.einsum("bkgqs,bqkgd->bskd", p, dof)
+    dp = jnp.einsum("bqkgd,bskd->bkgqs", dof, vf)
+    ds = p * (dp - delta.reshape(b, kvh, g, sq)[..., None]) * scale
+    dq = jnp.einsum("bkgqs,bskd->bqkgd", ds, kf).reshape(b, sq, h, d)
+    dk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qf)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)

@@ -236,7 +236,14 @@ def vmap_moments_flat(gs_tree, layout: ParamLayout, k: int) -> GradStats:
 
 
 def flash_attention(qh, k, v, q_pos=None, k_pos=None, *, causal: bool = True, window: int = 0):
-    """Adapter for models/attention.py: qh (B,S,KV,G,D) -> (B,S,KV,G,D)."""
+    """Adapter for models/attention.py: qh (B,S,KV,G,D) -> (B,S,KV,G,D).
+
+    Differentiable: the kernel carries a custom VJP whose backward runs the
+    fused Pallas dq and dk/dv kernels (kernels/flash_attention_bwd.py), so
+    use_pallas training keeps the whole attention fwd+bwd on the fused path.
+    Positions are assumed to be the implicit arange (train/prefill layout);
+    q_pos/k_pos ride along for signature parity with the jnp paths.
+    """
     b, s, kvh, g, d = qh.shape
     q = qh.reshape(b, s, kvh * g, d)
     out = fa.flash_attention(q, k, v, causal=causal, window=window, interpret=_interpret())

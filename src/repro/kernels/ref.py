@@ -1,7 +1,6 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 
@@ -77,10 +76,29 @@ def moments_finalize_ref(g_sum, g2_sum, k):
     return g_sum * inv, g2_sum * inv
 
 
-def attention_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
-    """Naive attention oracle. q: (B,Sq,H,D); k,v: (B,Skv,KV,D); GQA by h//g.
+def attention_mask_2d(sq: int, skv: int, causal: bool, window: int, q_offset: int = 0):
+    """(Sq, Skv) implicit-position validity mask shared by the jnp attention
+    references (q_pos = q_offset + arange(Sq), k_pos = arange(Skv))."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def attention_fwd_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
+    """Naive attention oracle with the flash-kernel residual contract:
+    returns (out (B,Sq,H,D), lse (B,H,Sq) f32).  GQA by h//g.
 
     Positions are implicit: q_pos = q_offset + arange(Sq), k_pos = arange(Skv).
+    A query row with no valid kv position yields exactly 0 output and
+    lse = -1e30 (the flash-kernel convention), not the uniform average a
+    clamped softmax would produce.  This is THE jnp attention reference —
+    the second-order VJP fallback in kernels/flash_attention.py uses it too,
+    so the masking convention has a single jnp home.
     """
     b, sq, h, d = q.shape
     kvh = k.shape[2]
@@ -88,14 +106,19 @@ def attention_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
     qh = q.reshape(b, sq, kvh, g, d)
     scale = d**-0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32), k.astype(jnp.float32)) * scale
-    qpos = q_offset + jnp.arange(sq)
-    kpos = jnp.arange(k.shape[1])
-    mask = jnp.ones((sq, k.shape[1]), bool)
-    if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
-    if window > 0:
-        mask &= kpos[None, :] > qpos[:, None] - window
+    mask = attention_mask_2d(sq, k.shape[1], causal, window, q_offset)
     s = jnp.where(mask[None, None, None], s, -1e30)
-    w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
-    return out.reshape(b, sq, h, d).astype(q.dtype)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(mask[None, None, None], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    valid = l > 0.0
+    out = jnp.where(valid[..., None], acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+    lse = jnp.where(valid, m + jnp.log(jnp.maximum(l, 1e-30)), -1e30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+    return out, lse.reshape(b, h, sq)
+
+
+def attention_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
+    """attention_fwd_ref's output without the LSE residual."""
+    return attention_fwd_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)[0]

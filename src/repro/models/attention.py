@@ -10,9 +10,12 @@ Three execution paths:
                  This is also the reference semantics for the Pallas kernel
                  in kernels/flash_attention.py.
   * kernel     — pl.pallas_call flash attention (TPU target); enabled via
-                 ParallelismConfig.use_pallas for self-attention prefill
-                 (forward-only: the kernel has no VJP), falls back to chunked
-                 everywhere else — training always differentiates the jnp path.
+                 ParallelismConfig.use_pallas for self-attention TRAIN and
+                 prefill (the kernel carries a custom VJP with fused Pallas
+                 backward kernels — kernels/flash_attention_bwd.py), falls
+                 back to chunked for decode and cross-attention, where kv
+                 positions are cache-explicit rather than the implicit
+                 arange the kernel assumes.
 
 KV caches are position-explicit: each slot stores its absolute position
 (`kpos`, -1 = empty) so full caches and sliding-window ring buffers share one
@@ -68,6 +71,9 @@ def _sdpa(q, k, v, mask) -> jnp.ndarray:
     scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
     scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    # rows with no valid kv (e.g. empty cache slots) emit exactly 0, matching
+    # the flash-kernel convention, instead of a uniform average over kv
+    w = jnp.where(mask.any(-1)[:, None, None, :, None], w, 0)
     return jnp.einsum("bkgqs,bskd->bqkgd", w, v)
 
 
@@ -110,7 +116,9 @@ def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, q_chunk, kv_chunk):
             msk = _mask(qp, kp, causal, window)[:, None, None, :, :]
             s = jnp.where(msk, s, NEG_INF)
             m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
-            p = jnp.exp(s - m_new[..., None])
+            # exact zeros off-mask (a fully-masked chunk has s == m == NEG_INF
+            # everywhere, where exp(s - m) would be 1 and inflate l)
+            p = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)
             corr = jnp.exp(m_run - m_new)
             l_new = l_run * corr + jnp.sum(p, axis=-1)
             acc = acc * corr[..., None] + jnp.einsum(
@@ -122,7 +130,8 @@ def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, q_chunk, kv_chunk):
         l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, kh, g, q_chunk, d), jnp.float32)
         (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
-        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        # l == 0 means the whole row was masked: emit exact 0, not acc/eps
+        out = jnp.where(l_f[..., None] > 0, acc / jnp.maximum(l_f, 1e-30)[..., None], 0.0)
         return None, out.transpose(0, 3, 1, 2, 4)  # (B,Cq,K,G,D)
 
     _, outs = jax.lax.scan(q_step, None, (qs, qps))  # (nq,B,Cq,K,G,D)
@@ -148,12 +157,17 @@ def attention(
     attn_chunk: int = 1024,
     cache_len: int = 0,
     use_pallas: bool = False,
+    implicit_pos: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Self- or cross-attention.
 
     mode: "train" (no cache), "prefill" (returns fresh cache), "decode"
     (consumes/returns cache; x is (B, 1, d)).
     memory: (B, M, d) for cross-attention (causal/window ignored).
+    implicit_pos: q_pos is the plain broadcast arange(S) — the layout the
+    Pallas kernel assumes.  Deliberately opt-IN (default False): a caller
+    that forgets it merely misses the fused path; defaulting True would let
+    packed/offset positions silently reach a kernel that arange-masks them.
     Returns (out (B,S,d), cache or None).
     """
     b, s, _ = x.shape
@@ -215,12 +229,13 @@ def attention(
 
     qh = q.reshape(b, s, n_kv_heads, g, head_dim)
     naive_elems = s * k.shape[1]
-    if use_pallas and mode == "prefill" and not cross and k.shape[1] == s:
-        # The Pallas flash kernel is forward-only (no VJP), so it serves the
-        # inference prefill — where q/k positions are the implicit arange the
-        # kernel assumes — while training keeps the differentiable chunked
-        # path (the train-time use_pallas win is the fused optimizer/stats
-        # kernels, which sit outside the autodiff graph).
+    if use_pallas and implicit_pos and mode in ("train", "prefill") and not cross and k.shape[1] == s:
+        # Fused path for train AND prefill: the kernel carries a custom VJP
+        # (fused dq and dk/dv Pallas kernels), so the training forward and
+        # backward both stay on Pallas.  Gated on implicit_pos — the kernel
+        # masks with the implicit arange, so packed/offset position layouts
+        # fall back to the position-explicit jnp paths below, as do
+        # decode and cross-attention (cache-explicit positions).
         from repro.kernels import ops as kops
 
         out = kops.flash_attention(qh, k, v, q_pos, k_pos, causal=causal, window=window)

@@ -30,6 +30,8 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.layout import FlatBuffer, is_flat
+
 _ACTIVE: Optional["Rules"] = None
 
 
@@ -134,6 +136,16 @@ class Rules:
             spec[0] = None  # keep small vectors replicated; cheap & robust
         return P(*spec)
 
+    def flat_buffer_pspec(self, shape: Tuple[int, ...]) -> P:
+        """FSDP rule for a packed (n_rows, 128) FlatBuffer: shard the ROWS
+        dimension over the FSDP axes (like the per-leaf m/v/p state it
+        replaced) and keep the 128-lane dim whole — TP-sharding lanes would
+        split the (block_rows, 128) kernel tiles, and the generic 2-D weight
+        rule would happily do exactly that (128 divides most model axes).
+        """
+        axes = self.fsdp_axes() if self.fsdp else None
+        return P(axes if (axes is not None and self.fits(shape[0], axes)) else None, None)
+
 
 def param_pspecs(params, rules: Optional[Rules] = None):
     r = rules or _ACTIVE
@@ -141,10 +153,14 @@ def param_pspecs(params, rules: Optional[Rules] = None):
         raise RuntimeError("no active sharding rules; call sharding.activate(mesh)")
 
     def one(path, leaf):
+        if is_flat(leaf):
+            # flat optimizer state: rows-dimension FSDP (the FlatBuffer node
+            # structure is preserved so the spec tree matches the state tree)
+            return FlatBuffer(r.flat_buffer_pspec(leaf.shape), leaf.layout)
         name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         return r.leaf_pspec(name, leaf.shape)
 
-    return jax.tree_util.tree_map_with_path(one, params)
+    return jax.tree_util.tree_map_with_path(one, params, is_leaf=is_flat)
 
 
 def param_shardings(params, rules: Optional[Rules] = None):

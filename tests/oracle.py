@@ -106,6 +106,63 @@ def property_cases(n: int, seed: int = 0) -> Iterable[dict]:
 
 
 # ---------------------------------------------------------------------------
+# Flash-attention differential harness (fwd + custom-VJP grads vs
+# ref.attention_ref under jax.grad)
+# ---------------------------------------------------------------------------
+
+# (B, S, H, KV, D, causal, window) against (BLOCK_Q=128, BLOCK_K=128) tiling:
+#   130     partial edge blocks on both q and kv grids
+#   128     seq == block (single full block)
+#   1       single one-row partial block (degenerate seq)
+#   200/100 window crossing a partial block boundary, non-block-aligned
+#   KV=1    MQA (GQA group == H)
+ATTN_GRAD_CASES: Tuple[Tuple, ...] = (
+    (2, 128, 4, 4, 64, True, 0),     # seq == block, no GQA
+    (1, 130, 4, 1, 32, True, 0),     # partial blocks + MQA (group == H)
+    (1, 256, 8, 2, 64, True, 64),    # GQA 4:1, block-aligned window
+    (1, 200, 6, 3, 32, True, 100),   # ragged seq + non-aligned window
+    (1, 1, 2, 1, 16, True, 0),       # seq 1: one partial row
+    (1, 64, 4, 4, 128, False, 0),    # bidirectional
+)
+
+
+def attention_inputs(case: Sequence, seed: int = 0, dtype=jnp.float32):
+    """(q, k, v, t) for one ATTN_GRAD_CASES entry; t is a fixed f32 cotangent
+    projection so scalar losses exercise a dense do."""
+    b, s, h, kvh, d = case[:5]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), dtype)
+    t = jax.random.normal(ks[3], (b, s, h, d), jnp.float32)
+    return q, k, v, t
+
+
+def run_attention_grads(case: Sequence, seed: int = 0, dtype=jnp.float32):
+    """Forward + (dq, dk, dv) for the Pallas kernel and the jnp oracle.
+
+    Returns ((out_k, out_r), (grads_k, grads_r)); grads come from jax.grad of
+    sum(out * t) so the kernel's custom VJP runs its fused backward kernels.
+    """
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    b, s, h, kvh, d, causal, window = case
+    q, k, v, t = attention_inputs(case, seed, dtype)
+
+    def loss(fn):
+        return lambda q_, k_, v_: jnp.sum(
+            fn(q_, k_, v_, causal=causal, window=window).astype(jnp.float32) * t
+        )
+
+    out_k = flash_attention(q, k, v, causal=causal, window=window)
+    out_r = ref.attention_ref(q, k, v, causal=causal, window=window)
+    grads_k = jax.grad(loss(flash_attention), argnums=(0, 1, 2))(q, k, v)
+    grads_r = jax.grad(loss(ref.attention_ref), argnums=(0, 1, 2))(q, k, v)
+    return (out_k, out_r), (grads_k, grads_r)
+
+
+# ---------------------------------------------------------------------------
 # Per-leaf reference dispatch (PR 1's kernels/ops.py loops, kept here as the
 # oracle the single-launch flat path is differentially certified against)
 # ---------------------------------------------------------------------------

@@ -174,9 +174,39 @@ def test_vmap_grad_stats_is_one_pallas_call():
     assert count_pallas_calls(jaxpr) == 1, jaxpr
 
 
+def test_flash_attention_train_vjp_launch_counts():
+    """The attention custom VJP is structurally fused: the primal is ONE
+    pallas_call (no LSE emitted when nothing differentiates), and a jax.grad
+    trace is exactly THREE — the LSE-emitting forward + the dq kernel + the
+    fused dk/dv kernel.  The delta preprocess is a jnp einsum, not a launch."""
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention import flash_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 130, 4, 32))
+    k = jax.random.normal(ks[1], (1, 130, 2, 32))
+    v = jax.random.normal(ks[2], (1, 130, 2, 32))
+    primal = jax.make_jaxpr(lambda *a: flash_attention(*a))(q, k, v)
+    assert count_pallas_calls(primal) == 1, primal
+    grad = jax.make_jaxpr(
+        jax.grad(lambda *a: jnp.sum(flash_attention(*a)), argnums=(0, 1, 2))
+    )(q, k, v)
+    assert count_pallas_calls(grad) == 3, grad
+
+
 def test_full_train_step_launch_count():
-    """End to end (fresh VR-LAMB step): scan-body accumulation + finalize +
-    update = exactly 3 structural pallas_calls, regardless of leaf count."""
+    """End to end (fresh VR-LAMB step, use_pallas): the whole hot loop is
+    Pallas.  Exactly 7 structural pallas_calls, regardless of leaf count:
+
+      1  attention forward in the primal layer scan (no LSE)
+      1  attention forward recompute under remat (LSE-emitting custom-vjp fwd)
+      2  attention backward (dq kernel + fused dk/dv kernel)
+      2  grad-stats (scan-body accumulation + finalize)
+      1  flat optimizer update
+
+    A dispatch regression on any layer (attention falling back to jnp, the
+    optimizer splitting per leaf, an extra stats sweep) changes the count."""
     from repro.configs import get_smoke
     from repro.data import lm_batches
     from repro.train import init_state, make_loss_fn, make_train_step
@@ -186,11 +216,12 @@ def test_full_train_step_launch_count():
         optimizer=dataclasses.replace(cfg.optimizer, name="vr_lamb", k=4),
         parallel=dataclasses.replace(cfg.parallel, use_pallas=True),
     )
+    assert cfg.parallel.remat  # the count below includes the remat recompute
     batch = next(iter(lm_batches(cfg.model.vocab_size, 8, 16, seed=0)))
     state = init_state(cfg)
     step_fn, _ = make_train_step(cfg, make_loss_fn(cfg))
     jaxpr = jax.make_jaxpr(step_fn)(state, batch)
-    assert count_pallas_calls(jaxpr) == 3, count_pallas_calls(jaxpr)
+    assert count_pallas_calls(jaxpr) == 7, count_pallas_calls(jaxpr)
 
 
 # ---------------------------------------------------------------------------

@@ -132,3 +132,36 @@ def test_norms():
     p2 = norm_init(None, 8, "layernorm")
     y2 = apply_norm(p2, x, "layernorm")
     np.testing.assert_allclose(np.mean(np.asarray(y2), -1), 0.0, atol=1e-5)
+
+
+def test_pallas_gate_respects_explicit_positions():
+    """The fused attention kernel masks with the implicit arange, so a model
+    forward with EXPLICIT (offset/packed) positions must fall back to the
+    position-explicit jnp path — use_pallas on and off must agree exactly,
+    and the fused path must still fire for positions=None."""
+    import dataclasses
+
+    from repro.configs import get_smoke
+    from repro.kernels.ops import count_pallas_calls
+    from repro.models import forward, init_params
+
+    cfg = get_smoke("granite-3-2b")
+    pc_off = dataclasses.replace(cfg.parallel, compute_dtype="float32")
+    pc_on = dataclasses.replace(pc_off, use_pallas=True)
+    params = init_params(cfg.model, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.model.vocab_size)
+    # packed layout: two documents restarting at position 0 mid-sequence
+    packed = jnp.concatenate(
+        [jnp.arange(8, dtype=jnp.int32), jnp.arange(8, dtype=jnp.int32)]
+    )[None, :].repeat(2, axis=0)
+
+    lg_on, _, _ = forward(cfg.model, pc_on, params, tokens, positions=packed)
+    lg_off, _, _ = forward(cfg.model, pc_off, params, tokens, positions=packed)
+    np.testing.assert_array_equal(np.asarray(lg_on), np.asarray(lg_off))
+    # structural: explicit positions -> zero launches; implicit -> kernel fires
+    jx = jax.make_jaxpr(lambda t, p: forward(cfg.model, pc_on, params, t, positions=p)[0])(
+        tokens, packed
+    )
+    assert count_pallas_calls(jx) == 0, jx
+    jx = jax.make_jaxpr(lambda t: forward(cfg.model, pc_on, params, t)[0])(tokens)
+    assert count_pallas_calls(jx) > 0, jx

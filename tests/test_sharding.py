@@ -89,6 +89,36 @@ def test_cache_seq_fallback_spec():
     assert batch_pspec(leaf, r_tp, 1, kind="cache") == P(None, ("data", "model"), None, None)
 
 
+def test_flat_buffer_rows_fsdp():
+    """Packed (rows, 128) optimizer buffers shard the ROWS dim over the FSDP
+    axes; the lane dim stays whole (the generic 2-D rule would TP-shard it)."""
+    import jax.numpy as jnp
+
+    from repro.core.layout import FlatBuffer, ParamLayout, is_flat
+    from repro.sharding.rules import param_pspecs
+
+    r = Rules(mesh=SINGLE)
+    assert r.flat_buffer_pspec((512, 128)) == P("data", None)
+    # the generic rule WOULD have hit this shape with P("data", "model")
+    assert r.leaf_pspec("m/data", (512, 128)) == P("data", "model")
+    # fsdp off / non-divisible rows -> replicated
+    assert Rules(mesh=SINGLE, fsdp=False).flat_buffer_pspec((512, 128)) == P(None, None)
+    assert r.flat_buffer_pspec((7, 128)) == P(None, None)
+    # pod meshes follow the fsdp_over_pod knob like every other weight
+    rp = Rules(mesh=POD, fsdp_over_pod=True)
+    assert rp.flat_buffer_pspec((512, 128)) == P(("pod", "data"), None)
+
+    # through param_pspecs the FlatBuffer node structure is preserved and the
+    # spec rides inside it (64 rows divide the 16-way data axis)
+    tree = {"w": jnp.ones((40, 7))}
+    layout = ParamLayout.for_tree(tree)
+    fb = FlatBuffer(layout.pack(tree), layout)
+    specs = param_pspecs({"m": fb, "step": jnp.zeros((), jnp.int32)}, r)
+    assert is_flat(specs["m"])
+    assert specs["m"].data == P("data", None)
+    assert specs["step"] == P()
+
+
 def test_constrain_noop_without_mesh():
     import jax.numpy as jnp
 
