@@ -193,12 +193,73 @@ def flat_vs_per_leaf(fast: bool) -> dict:
     }
 
 
+def packed_attention(fast: bool) -> dict:
+    """Packed (explicit positions + segments) vs unpacked (implicit arange)
+    fused attention, fwd + grad.
+
+    Both run the SAME kernels since the position-aware refactor — the delta
+    isolates the cost of the pos/seg operands (4 extra int32 row streams +
+    the in-kernel bound reductions) against the dead-tile skips they enable
+    (a packed row's cross-document and padded-tail tiles are pl.when-dead).
+    CPU interpret mode: latencies are structural only (the interpreter runs
+    dead tiles' pl.when scaffolding too); launch counts and the TPU rerun
+    are the real story.
+    """
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ops import _interpret, count_pallas_calls
+
+    b, s, h, kvh, d = (1, 256, 4, 2, 32) if fast else (2, 512, 8, 2, 64)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    # 3 documents per row, boundaries off the block grid, short padded tail
+    import numpy as np
+
+    lens = (s // 2, s // 3, s - s // 2 - s // 3 - s // 16)
+    pos_row = np.full(s, -1, np.int32)
+    o = 0
+    for n in lens:
+        pos_row[o : o + n] = np.arange(n)
+        o += n
+    pos = jnp.asarray(pos_row)[None, :].repeat(b, 0)
+
+    variants = {
+        "unpacked": lambda q_: flash_attention(q_, k, v, causal=True),
+        "packed": lambda q_: flash_attention(q_, k, v, pos, pos, causal=True),
+    }
+    rec = {}
+    iters = 2 if fast else 4
+    for name, fn in variants.items():
+        fwd = jax.jit(fn)
+        grad = jax.jit(jax.grad(lambda q_: jnp.sum(fn(q_))))
+        n_fwd = count_pallas_calls(jax.make_jaxpr(fwd)(q))
+        n_grad = count_pallas_calls(jax.make_jaxpr(grad)(q))
+        dt_f, _ = timed(fwd, q, warmup=1, iters=iters)
+        dt_g, _ = timed(grad, q, warmup=1, iters=iters)
+        emit(f"attn_{name}_fwd", dt_f * 1e6, f"S={s};launches={n_fwd};note=CPU-interpret")
+        emit(f"attn_{name}_grad", dt_g * 1e6, f"S={s};launches={n_grad};note=CPU-interpret")
+        rec[name] = {
+            "fwd_launches": n_fwd, "grad_launches": n_grad,
+            "fwd_us": dt_f * 1e6, "grad_us": dt_g * 1e6,
+        }
+    return {
+        "shape": {"B": b, "S": s, "H": h, "KV": kvh, "D": d, "docs": list(lens)},
+        "interpret": _interpret(),
+        "backend": jax.default_backend(),
+        **rec,
+        "note": "packed == explicit pos/seg operands; launch counts must match unpacked",
+    }
+
+
 def main(fast: bool = False) -> None:
     t0 = time.time()
     trainer_overhead(fast)
     update_math(fast)
     accumulation(fast)
     rec = flat_vs_per_leaf(fast)
+    rec["packed_attention"] = packed_attention(fast)
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_flat_state.json")
     with open(out, "w") as f:
         json.dump(rec, f, indent=1)

@@ -1,4 +1,10 @@
-from repro.data.pipeline import device_stream, host_slice, prefetch, shard_batch  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    device_stream,
+    host_slice,
+    pack_sequences,
+    prefetch,
+    shard_batch,
+)
 from repro.data.synthetic import (  # noqa: F401
     CTRModel,
     MarkovLM,
@@ -7,4 +13,5 @@ from repro.data.synthetic import (  # noqa: F401
     ctr_batches,
     linreg_data,
     lm_batches,
+    packed_lm_batches,
 )

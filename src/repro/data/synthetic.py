@@ -75,6 +75,46 @@ def lm_batches(
         yield out
 
 
+def packed_lm_batches(
+    vocab: int,
+    batch: int,
+    seq: int,
+    seed: int = 0,
+    stream_seed: int = 1,
+    min_doc: int = 0,
+    max_doc: int = 0,
+) -> Iterator[Dict]:
+    """Infinite PACKED stream: variable-length Markov documents greedily
+    packed into (batch, seq) rows (data/pipeline.pack_sequences).
+
+    Yields {"tokens","targets","positions","segments","mask"}: positions
+    restart at 0 per document (-1 on pads), segments are the per-row
+    document index, mask excludes pads from the loss.  This is the batch
+    layout that drives the position/segment-aware fused attention path —
+    the BERT/LLM-pretraining shape the GSNR paper's 64k/128k-batch results
+    assume (dense batches, no cross-document attention).
+    """
+    from repro.data.pipeline import pack_sequences
+
+    chain = MarkovLM(vocab, seed=seed)
+    rng = np.random.RandomState(stream_seed)
+    lo = min_doc or max(1, seq // 8)
+    hi = max_doc or seq
+    if not (1 <= lo <= hi <= seq):
+        raise ValueError(f"need 1 <= min_doc <= max_doc <= seq, got {lo}, {hi}, {seq}")
+    while True:
+        # a row holds at most seq tokens, so total >= batch*seq guarantees
+        # first-fit opens at least ``batch`` rows: ONE pack per batch
+        pairs, total = [], 0
+        while total < batch * seq:
+            n = int(rng.randint(lo, hi + 1))
+            doc = chain.sample(1, n, rng)[0]  # (n + 1,) tokens
+            pairs.append((doc[:-1], doc[1:]))
+            total += n
+        rows = pack_sequences(pairs, seq)
+        yield {k_: v[:batch] for k_, v in rows.items()}
+
+
 # ---------------------------------------------------------------------------
 # classification (CIFAR10 proxy)
 # ---------------------------------------------------------------------------

@@ -17,4 +17,7 @@
 #   grad_stats.moments_*        — per-leaf moment accumulation (scan body)
 #
 #   flash_attention             — causal/sliding-window online-softmax attention
+#                                 (position/segment-aware: packed + offset
+#                                 layouts; custom VJP -> fused fwd AND bwd)
+#   flash_attention_bwd         — FA-2 recomputation backward (dq, fused dk/dv)
 # ops.py holds the jit'd dispatch wrappers; ref.py the pure-jnp oracles.

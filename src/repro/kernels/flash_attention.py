@@ -1,5 +1,6 @@
 """Pallas TPU kernel: causal / sliding-window flash attention (GQA-aware),
-with a custom VJP so the TRAINING forward runs on the fused path too.
+position- and segment-aware, with a custom VJP so the TRAINING forward runs
+on the fused path too.
 
 Forward grid (B, H, nq, nk) with the kv dim innermost: the output block for
 (b, h, iq) is revisited across ik while running max / denominator /
@@ -13,18 +14,42 @@ The backward kernels live in kernels/flash_attention_bwd.py.
 GQA: the kv-head index is h // (H // KV) inside the BlockSpec index maps, so
 grouped queries stream the same k/v tiles without materializing the repeat.
 
-Masking convention: a query row with NO valid kv position (e.g. sliding
-windows past the end of a shorter kv sequence) produces EXACTLY zero output
-and ``lse = NEG_INF`` — not the `acc / max(l, eps)` garbage of a clamped
-divide.  ref.attention_ref is the oracle and shares the convention.
+Positions and segments are EXPLICIT kernel operands (the packed-sequence
+contract):
+
+  * q_pos (B, Sq) / k_pos (B, Skv) int32 — absolute positions; a value < 0
+    marks padding (the kv-cache convention).  When the caller passes no
+    positions the implicit training layout arange(S) is materialized here,
+    outside the kernel.
+  * q_seg / k_seg int32 — segment (document) ids, derived from positions by
+    ``segment_ids_from_positions``: a new segment starts wherever the
+    position does not increase by exactly 1.  Packed batches (several
+    documents per row, each restarting at position 0) therefore mask
+    cross-document attention with ``q_seg == k_seg`` without any extra
+    model-level input.
+
+Masking rule per (q, k) pair: ``q_pos >= 0 & k_pos >= 0 & q_seg == k_seg``
+plus causal ``k_pos <= q_pos`` and window ``k_pos > q_pos - window``.
+Partial-block bounds are folded into the operands: out-of-range rows of edge
+tiles are sanitized to position -1 / segment < 0 on load.
+
+Masking convention: a query row with NO valid kv position (padding, or
+sliding windows past the end of a shorter kv sequence) produces EXACTLY zero
+output and ``lse = NEG_INF`` — not the `acc / max(l, eps)` garbage of a
+clamped divide.  ref.attention_ref is the oracle and shares the convention.
+
+Dead tiles are still skipped, by layout: implicit-arange callers keep the
+free grid-index predicate (``tile_reachable_static`` — selected by a static
+``implicit`` flag, statically dense grids skip the pl.when entirely), while
+explicit-position callers use per-tile pos/seg BOUNDS of the sanitized
+operand tiles (``tile_reachable`` — cheap VPU int min/max reductions) which
+also kill cross-segment tiles and fully-padded tails of packed rows.
 
 Autodiff composes to arbitrary order: first-order grads run the fused Pallas
 backward; the Pallas entry points carry jnp-replica VJPs so jax.grad twice
 (and jvp-of-vjp) falls back to differentiable jnp math instead of hitting a
-non-differentiable pallas_call.
-
-Positions are implicit (training layout): q_pos = arange(S), k_pos =
-arange(Skv).
+non-differentiable pallas_call.  Position/segment operands are integer inputs
+and receive symbolic-zero (None) cotangents.
 """
 from __future__ import annotations
 
@@ -38,26 +63,94 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
+_BIG = 2**30  # position/segment sentinel for masked min/max bounds
 
 
-def tile_mask(iq, ik, block_q: int, block_k: int, seq_kv: int,
-              causal: bool, window: int, seq_q: int | None = None):
-    """(block_q, block_k) validity mask for one (iq, ik) tile — THE masking
-    rule, shared by the forward and backward kernels so the backward's
-    softmax recompute p = exp(s - lse) can never drift from the mask the
-    forward's lse was built under.  seq_q=None skips the q-side bound (the
-    forward's per-row outputs are dropped on copy-back; the backward reduces
-    across q rows and must exclude out-of-range rows of partial blocks)."""
-    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-    mask = kpos < seq_kv  # partial-block bounds
-    if seq_q is not None:
-        mask &= qpos < seq_q
+def segment_ids_from_positions(pos: jnp.ndarray) -> jnp.ndarray:
+    """(B, S) int32 positions -> (B, S) int32 segment ids.
+
+    THE packed-layout contract: a new segment starts wherever the position
+    does not increase by exactly 1 (documents are arange runs, possibly
+    offset; packed rows restart at 0; pads carry -1 and land in throwaway
+    segments that the ``pos >= 0`` validity mask kills anyway).  A plain
+    arange — or any single offset run — yields one segment, so the implicit
+    training layout is the trivial case of the same rule.
+    """
+    pos = pos.astype(jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.ones_like(pos[:, :1], bool), pos[:, 1:] != pos[:, :-1] + 1], axis=1
+    )
+    return jnp.cumsum(starts.astype(jnp.int32), axis=1) - 1
+
+
+def tile_mask(qp, kp, qs, ks, causal: bool, window: int):
+    """(block_q, block_k) validity mask for one tile from SANITIZED per-tile
+    position/segment vectors — THE masking rule, shared by the forward and
+    backward kernels so the backward's softmax recompute p = exp(s - lse) can
+    never drift from the mask the forward's lse was built under.
+
+    qp/qs: (1, block_q) or (block_q,) int32, kp/ks likewise for block_k
+    (rank-normalized here: q-side to columns, k-side to rows); out-of-range
+    rows of partial edge tiles arrive as pos -1 / seg < 0 (see
+    _load_pos_seg), so the ``pos >= 0`` terms subsume the old seq-bound
+    checks.
+    """
+    qp2, qs2 = qp.reshape(-1, 1), qs.reshape(-1, 1)
+    kp2, ks2 = kp.reshape(1, -1), ks.reshape(1, -1)
+    mask = (qp2 >= 0) & (kp2 >= 0) & (qs2 == ks2)
     if causal:
-        mask &= kpos <= qpos
+        mask &= kp2 <= qp2
     if window > 0:
-        mask &= kpos > qpos - window
+        mask &= kp2 > qp2 - window
     return mask
+
+
+def tile_reachable_static(iq, ik, block_q: int, block_k: int, causal: bool, window: int):
+    """Grid-index dead-tile predicate for the IMPLICIT arange layout: two
+    scalar comparisons, no operand reads.  Returns None when the tile grid
+    is statically dense (non-causal, no window), so callers can skip the
+    pl.when entirely."""
+    ok = None
+    if causal:  # earliest k in tile vs latest q in tile
+        ok = ik * block_k <= iq * block_q + (block_q - 1)
+    if window > 0:  # latest k in tile vs the window's left edge for latest q
+        c = ik * block_k + (block_k - 1) > iq * block_q - window
+        ok = c if ok is None else ok & c
+    return ok
+
+
+def tile_reachable(qp, kp, qs, ks, causal: bool, window: int):
+    """Scalar predicate: can ANY (q, k) pair in this tile be unmasked?
+
+    Computed from per-tile pos/seg bounds of the sanitized operand vectors
+    (invalid entries excluded from the min/max via +-_BIG sentinels): causal
+    kills tiles whose earliest k sits after the latest q, a sliding window
+    kills tiles wholly left of the window, disjoint segment ranges kill
+    cross-document tiles, and all-padding tiles are dead outright.  For the
+    implicit arange layout this reduces to the grid-index predicate
+    tile_reachable_static, which the kernels use instead when the caller's
+    positions were implicit (no bound reductions on a layout whose dead
+    tiles are known from grid indices alone).
+    """
+    qp, qs = qp.reshape(1, -1), qs.reshape(1, -1)  # rank-2 for the VPU
+    kp, ks = kp.reshape(1, -1), ks.reshape(1, -1)
+    qv, kv = qp >= 0, kp >= 0
+    qp_max = jnp.max(jnp.where(qv, qp, -_BIG))
+    kp_min = jnp.min(jnp.where(kv, kp, _BIG))
+    ok = jnp.any(qv) & jnp.any(kv)
+    # segment ranges must overlap (segments are nondecreasing along the row)
+    qs_min = jnp.min(jnp.where(qv, qs, _BIG))
+    qs_max = jnp.max(jnp.where(qv, qs, -_BIG))
+    ks_min = jnp.min(jnp.where(kv, ks, _BIG))
+    ks_max = jnp.max(jnp.where(kv, ks, -_BIG))
+    ok &= (qs_min <= ks_max) & (ks_min <= qs_max)
+    if causal:  # earliest valid k vs latest valid q
+        ok &= kp_min <= qp_max
+    if window > 0:  # latest valid k vs the window's left edge for latest q
+        qp_min = jnp.min(jnp.where(qv, qp, _BIG))
+        kp_max = jnp.max(jnp.where(kv, kp, -_BIG))
+        ok &= kp_max > qp_min - window
+    return ok
 
 
 def zero_oob_rows(x, i, block: int, seq: int):
@@ -68,39 +161,42 @@ def zero_oob_rows(x, i, block: int, seq: int):
     return jnp.where(valid, x, 0.0), valid
 
 
-def tile_reachable(iq, ik, block_q: int, block_k: int, causal: bool, window: int):
-    """Scalar predicate: can ANY (q, k) pair in tile (iq, ik) be unmasked?
-
-    Computable from grid indices alone — causal kills tiles strictly above
-    the diagonal, a sliding window kills tiles strictly left of it (for
-    causal attention roughly half the grid; for small windows almost all of
-    it).  Partial-block bounds never kill a whole tile (the grid is cdiv-
-    sized).  Returns None when the tile grid is statically dense, so callers
-    can skip the pl.when entirely."""
-    ok = None
-    if causal:  # earliest k in tile vs latest q in tile
-        ok = ik * block_k <= iq * block_q + (block_q - 1)
-    if window > 0:  # latest k in tile vs the window's left edge for latest q
-        c = ik * block_k + (block_k - 1) > iq * block_q - window
-        ok = c if ok is None else ok & c
-    return ok
+def _load_pos_seg(pos_ref, seg_ref, i, block: int, seq: int, seg_fill: int):
+    """Sanitized (1, block) pos/seg tiles: entries beyond ``seq`` (the
+    NaN/garbage padding of partial edge blocks) become pos -1 and a negative
+    seg sentinel.  seg_fill differs between the q (-1) and k (-2) sides so
+    out-of-range q rows can never segment-match out-of-range k rows.
+    Everything stays rank-2 (Mosaic rejects iota of rank < 2 — same reason
+    zero_oob_rows shapes its iota (block, 1))."""
+    idx = i * block + jax.lax.broadcasted_iota(jnp.int32, (1, pos_ref.shape[-1]), 1)
+    valid = idx < seq
+    pos = jnp.where(valid, pos_ref[...], -1)
+    seg = jnp.where(valid, seg_ref[...], seg_fill)
+    return pos, seg
 
 
-def _maybe_skip_dead_tile(compute, iq, ik, block_q: int, block_k: int,
-                          causal: bool, window: int):
+def _maybe_skip_dead_tile(
+    compute, qp, kp, qs, ks, causal: bool, window: int,
+    *, implicit: bool, iq, ik, block_q: int, block_k: int,
+):
     """Run ``compute`` only on reachable tiles (scratch accumulators are
-    simply left untouched on dead ones)."""
-    live = tile_reachable(iq, ik, block_q, block_k, causal, window)
-    if live is None:
-        compute()
+    simply left untouched on dead ones).  ``implicit`` (static) selects the
+    grid-index predicate — free for dense grids — over the pos/seg-bound
+    reductions only packed layouts need."""
+    if implicit:
+        live = tile_reachable_static(iq, ik, block_q, block_k, causal, window)
+        if live is None:
+            compute()
+        else:
+            pl.when(live)(compute)
     else:
-        pl.when(live)(compute)
+        pl.when(tile_reachable(qp, kp, qs, ks, causal, window))(compute)
 
 
 def _kernel(
-    q_ref, k_ref, v_ref, *rest,
+    q_ref, k_ref, v_ref, qp_ref, kp_ref, qs_ref, ks_ref, *rest,
     causal: bool, window: int, block_q: int, block_k: int, scale: float,
-    seq_kv: int, with_lse: bool,
+    seq_q: int, seq_kv: int, with_lse: bool, implicit: bool,
 ):
     if with_lse:
         o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
@@ -116,6 +212,9 @@ def _kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
+    qp, qs = _load_pos_seg(qp_ref, qs_ref, iq, block_q, seq_q, seg_fill=-1)
+    kp, ks = _load_pos_seg(kp_ref, ks_ref, ik, block_k, seq_kv, seg_fill=-2)
+
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)  # (BQ, D)
         k, _ = zero_oob_rows(k_ref[0, :, 0, :].astype(jnp.float32), ik, block_k, seq_kv)
@@ -124,7 +223,7 @@ def _kernel(
             q * scale, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         )  # (BQ, BK)
 
-        mask = tile_mask(iq, ik, block_q, block_k, seq_kv, causal, window)
+        mask = tile_mask(qp, kp, qs, ks, causal, window)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]
@@ -143,7 +242,9 @@ def _kernel(
         m_scr[...] = m_new
         l_scr[...] = l_new
 
-    _maybe_skip_dead_tile(_compute, iq, ik, block_q, block_k, causal, window)
+    _maybe_skip_dead_tile(_compute, qp, kp, qs, ks, causal, window,
+                          implicit=implicit, iq=iq, ik=ik,
+                          block_q=block_q, block_k=block_k)
 
     @pl.when(ik == nk - 1)
     def _finalize():
@@ -158,7 +259,8 @@ def _kernel(
             )
 
 
-def _fwd_call(q, k, v, *, causal, window, block_q, block_k, interpret, with_lse):
+def _fwd_call(q, k, v, q_pos, k_pos, q_seg, k_seg,
+              *, causal, window, block_q, block_k, interpret, with_lse, implicit):
     """One pallas_call: out (B,S,H,D) [+ lse (B,H,S) f32 when with_lse]."""
     b, sq, h, d = q.shape
     skv, kvh = k.shape[1], k.shape[2]
@@ -167,6 +269,8 @@ def _fwd_call(q, k, v, *, causal, window, block_q, block_k, interpret, with_lse)
     nk = -(-skv // block_k)
     scale = d**-0.5
 
+    qrow_spec = pl.BlockSpec((1, block_q), lambda b_, h_, iq, ik: (b_, iq))
+    krow_spec = pl.BlockSpec((1, block_k), lambda b_, h_, iq, ik: (b_, ik))
     out_shape = [jax.ShapeDtypeStruct((b, sq, h, d), q.dtype)]
     out_specs = [pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0))]
     if with_lse:
@@ -175,14 +279,15 @@ def _fwd_call(q, k, v, *, causal, window, block_q, block_k, interpret, with_lse)
     outs = pl.pallas_call(
         functools.partial(
             _kernel, causal=causal, window=window,
-            block_q=block_q, block_k=block_k, scale=scale, seq_kv=skv,
-            with_lse=with_lse,
+            block_q=block_q, block_k=block_k, scale=scale, seq_q=sq, seq_kv=skv,
+            with_lse=with_lse, implicit=implicit,
         ),
         grid=(b, h, nq, nk),
         in_specs=[
             pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
             pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
             pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
+            qrow_spec, krow_spec, qrow_spec, krow_spec,
         ],
         out_specs=out_specs,
         out_shape=out_shape,
@@ -192,12 +297,16 @@ def _fwd_call(q, k, v, *, causal, window, block_q, block_k, interpret, with_lse)
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, q_pos, k_pos, q_seg, k_seg)
     return tuple(outs) if with_lse else (outs[0],)
 
 
+_NO_POS_GRADS = (None, None, None, None)  # int operands: symbolic-zero cotangents
+
+
 @functools.lru_cache(maxsize=None)
-def _flash_fn(causal: bool, window: int, block_q: int, block_k: int, interpret: bool):
+def _flash_fn(causal: bool, window: int, block_q: int, block_k: int,
+              interpret: bool, implicit: bool):
     """custom_vjp'd flash attention for one static config.
 
     Three nested custom_vjp layers keep every pallas_call out of autodiff's
@@ -208,63 +317,126 @@ def _flash_fn(causal: bool, window: int, block_q: int, block_k: int, interpret: 
                 vjp (2nd order+): jnp replica attention_fwd_ref.
       _bwd_p    primal: fused dq + dk/dv kernels.
                 vjp (2nd order+): jnp replica attention_bwd_ref.
+
+    All three take the (q_pos, k_pos, q_seg, k_seg) int operands positionally
+    and return None cotangents for them.
     """
     from repro.kernels import flash_attention_bwd as fab
 
     kw = dict(causal=causal, window=window, block_q=block_q, block_k=block_k,
-              interpret=interpret)
+              interpret=interpret, implicit=implicit)
+    pos_kw = lambda qp, kp, qs, ks: dict(q_pos=qp, k_pos=kp, q_seg=qs, k_seg=ks)
 
     @jax.custom_vjp
-    def _fwd_p(q, k, v):
-        return _fwd_call(q, k, v, with_lse=True, **kw)
+    def _fwd_p(q, k, v, qp, kp, qs, ks):
+        return _fwd_call(q, k, v, qp, kp, qs, ks, with_lse=True, **kw)
 
-    def _fwd_p_fwd(q, k, v):
-        return _fwd_p(q, k, v), (q, k, v)
+    def _fwd_p_fwd(q, k, v, qp, kp, qs, ks):
+        return _fwd_p(q, k, v, qp, kp, qs, ks), (q, k, v, qp, kp, qs, ks)
 
     def _fwd_p_bwd(res, ct):
-        q, k, v = res
+        q, k, v, qp, kp, qs, ks = res
         _, vjp = jax.vjp(
-            lambda q_, k_, v_: fab.attention_fwd_ref(q_, k_, v_, causal=causal, window=window),
+            lambda q_, k_, v_: fab.attention_fwd_ref(
+                q_, k_, v_, causal=causal, window=window, **pos_kw(qp, kp, qs, ks)
+            ),
             q, k, v,
         )
-        return vjp(ct)
+        return vjp(ct) + _NO_POS_GRADS
 
     _fwd_p.defvjp(_fwd_p_fwd, _fwd_p_bwd)
 
     @jax.custom_vjp
-    def _bwd_p(q, k, v, lse, delta, do):
-        return fab.flash_attention_bwd(q, k, v, lse, delta, do, **kw)
+    def _bwd_p(q, k, v, lse, delta, do, qp, kp, qs, ks):
+        return fab.flash_attention_bwd(q, k, v, lse, delta, do, qp, kp, qs, ks, **kw)
 
-    def _bwd_p_fwd(q, k, v, lse, delta, do):
-        return _bwd_p(q, k, v, lse, delta, do), (q, k, v, lse, delta, do)
+    def _bwd_p_fwd(q, k, v, lse, delta, do, qp, kp, qs, ks):
+        return _bwd_p(q, k, v, lse, delta, do, qp, kp, qs, ks), (
+            q, k, v, lse, delta, do, qp, kp, qs, ks
+        )
 
     def _bwd_p_bwd(res, ct):
+        qp, kp, qs, ks = res[6:]
         _, vjp = jax.vjp(
-            lambda *a: fab.attention_bwd_ref(*a, causal=causal, window=window), *res
+            lambda *a: fab.attention_bwd_ref(
+                *a, causal=causal, window=window, **pos_kw(qp, kp, qs, ks)
+            ),
+            *res[:6],
         )
-        return vjp(ct)
+        return vjp(ct) + _NO_POS_GRADS
 
     _bwd_p.defvjp(_bwd_p_fwd, _bwd_p_bwd)
 
     @jax.custom_vjp
-    def flash(q, k, v):
-        return _fwd_call(q, k, v, with_lse=False, **kw)[0]
+    def flash(q, k, v, qp, kp, qs, ks):
+        return _fwd_call(q, k, v, qp, kp, qs, ks, with_lse=False, **kw)[0]
 
-    def flash_fwd(q, k, v):
-        out, lse = _fwd_p(q, k, v)
-        return out, (q, k, v, out, lse)
+    def flash_fwd(q, k, v, qp, kp, qs, ks):
+        out, lse = _fwd_p(q, k, v, qp, kp, qs, ks)
+        return out, (q, k, v, out, lse, qp, kp, qs, ks)
 
     def flash_bwd(res, do):
-        q, k, v, out, lse = res
+        q, k, v, out, lse, qp, kp, qs, ks = res
         # FlashAttention-2 preprocess: delta_i = <dO_i, O_i> — one cheap
         # element-wise jnp pass (XLA fuses it), not a kernel launch.
         delta = jnp.einsum(
             "bshd,bshd->bhs", do.astype(jnp.float32), out.astype(jnp.float32)
         )
-        return _bwd_p(q, k, v, lse, delta, do)
+        return _bwd_p(q, k, v, lse, delta, do, qp, kp, qs, ks) + _NO_POS_GRADS
 
     flash.defvjp(flash_fwd, flash_bwd)
     return flash
+
+
+def resolve_positions(q_pos, k_pos, sq: int, skv: int, q_seg=None, k_seg=None):
+    """Normalize the position operands: (q_pos, k_pos, q_seg, k_seg) int32.
+
+    Both positions explicit -> segments derived (unless also explicit);
+    neither -> the implicit training layout arange(S), which is only
+    well-defined for Sq == Skv (see flash_attention).  Exactly one explicit
+    position operand is a contract violation.
+
+    DERIVED-SEGMENT CONTRACT: segment_ids_from_positions numbers segments
+    as per-STREAM ordinals (0, 1, ... along each row).  Ordinals from two
+    DIFFERENT position streams (q_pos and k_pos distinct arrays, e.g. a
+    query block continuing a multi-document kv cache) only align when each
+    side is a single segment — a q continuing the cache's document 2 would
+    derive q_seg=0 and match the cache's document 0.  Cross-stream
+    multi-segment layouts must pass EXPLICIT q_seg/k_seg (certified by
+    tests/test_oracle.py::test_cross_stream_segments_need_explicit_ids);
+    self-attention (k_pos is q_pos) and single-segment-per-side layouts are
+    safe to derive.  Not checkable here: segment counts are data-dependent
+    and this runs under jit.
+    """
+    if (q_pos is None) != (k_pos is None):
+        raise ValueError(
+            "flash_attention: q_pos and k_pos must be passed together "
+            f"(got q_pos={'set' if q_pos is not None else None}, "
+            f"k_pos={'set' if k_pos is not None else None})"
+        )
+    if q_pos is None:
+        if sq != skv:
+            raise ValueError(
+                "flash_attention: implicit arange positions are only defined "
+                f"for Sq == Skv, got Sq={sq}, Skv={skv} — the q-vs-kv "
+                "alignment would be ambiguous (start- vs end-aligned). "
+                "Pass explicit q_pos/k_pos (B, S) int32 instead."
+            )
+        q_pos = k_pos = jnp.arange(sq, dtype=jnp.int32)[None, :]
+        # an arange is one segment: skip the cumsum derivation
+        if q_seg is None:
+            q_seg = jnp.zeros((1, sq), jnp.int32)
+        if k_seg is None:
+            k_seg = q_seg
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    k_pos = jnp.asarray(k_pos, jnp.int32)
+    if q_seg is None:
+        q_seg = segment_ids_from_positions(q_pos)
+    if k_seg is None:
+        k_seg = (
+            q_seg if k_pos is q_pos else segment_ids_from_positions(k_pos)
+        )
+    return q_pos, k_pos, jnp.asarray(q_seg, jnp.int32), jnp.asarray(k_seg, jnp.int32)
 
 
 @functools.partial(
@@ -274,6 +446,10 @@ def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
+    q_pos: jnp.ndarray | None = None,
+    k_pos: jnp.ndarray | None = None,
+    q_seg: jnp.ndarray | None = None,
+    k_seg: jnp.ndarray | None = None,
     *,
     causal: bool = True,
     window: int = 0,
@@ -281,9 +457,27 @@ def flash_attention(
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """q: (B,S,H,D); k,v: (B,Skv,KV,D) -> (B,S,H,D).  Differentiable."""
+    """q: (B,S,H,D); k,v: (B,Skv,KV,D) -> (B,S,H,D).  Differentiable.
+
+    q_pos/k_pos: optional (B, S)/(B, Skv) int32 absolute positions (pos < 0
+    = padding); omitted -> the implicit training arange, which REQUIRES
+    Sq == Skv (a loud ValueError otherwise — the old kernel silently start-
+    aligned the two aranges).  Segment ids are derived from positions
+    (segment_ids_from_positions) unless passed explicitly, so packed
+    multi-document rows mask cross-document attention with no extra operand.
+    """
     b, sq, h, d = q.shape
     skv = k.shape[1]
+    implicit = q_pos is None  # static: picks the grid-index dead-tile skip
+    q_pos, k_pos, q_seg, k_seg = resolve_positions(
+        q_pos, k_pos, sq, skv, q_seg=q_seg, k_seg=k_seg
+    )
+    q_pos = jnp.broadcast_to(q_pos, (b, sq))
+    k_pos = jnp.broadcast_to(k_pos, (b, skv))
+    q_seg = jnp.broadcast_to(q_seg, (b, sq))
+    k_seg = jnp.broadcast_to(k_seg, (b, skv))
     block_q = min(block_q, sq)
     block_k = min(block_k, skv)
-    return _flash_fn(causal, window, block_q, block_k, interpret)(q, k, v)
+    return _flash_fn(causal, window, block_q, block_k, interpret, implicit)(
+        q, k, v, q_pos, k_pos, q_seg, k_seg
+    )

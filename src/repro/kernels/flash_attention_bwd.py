@@ -1,6 +1,7 @@
 """Pallas TPU kernels: recomputation-based flash-attention backward
-(FlashAttention-2, Dao 2023, Alg. 2), GQA-aware, plus the differentiable jnp
-replicas used as the second-order VJP fallback and as oracles.
+(FlashAttention-2, Dao 2023, Alg. 2), GQA-aware and position/segment-aware,
+plus the differentiable jnp replicas used as the second-order VJP fallback
+and as oracles.
 
 Residual contract (from kernels/flash_attention.py): per query row
 ``lse = m + log l`` (NEG_INF for rows with no valid kv) and the jnp
@@ -19,14 +20,16 @@ Two kernels, mirroring the FA-2 grid split:
   * dk/dv:   grid (B, KV, nk, G*nq), the inner dim walking every
              (group member, q block) pair — each kv block owns dk/dv
              accumulators and the GQA group-sum happens in the same sweep,
-             so outputs land directly in the (B, Skv, KV, D) kv-head shape
-             with no (B, Skv, H, D) intermediate.
+             so outputs land directly in the kv-head shape.
 
-Masking matches the forward (causal / sliding window / partial kv blocks)
-plus a q-side bound: out-of-range q rows of partial edge blocks are zeroed
-and masked so they contribute nothing to the dk/dv reductions (interpret
-mode pads partial blocks with NaN; the forward never had to care because
-its per-row outputs are simply dropped on copy-back).
+Both kernels take the same (q_pos, k_pos, q_seg, k_seg) operands as the
+forward and mask through the SAME tile_mask rule — positions < 0 are
+padding, segments gate cross-document pairs, and the q-side bound of
+partial edge blocks is folded into the sanitized loads (out-of-range q rows
+arrive as pos -1 / seg -1, and their q/do/lse/delta streams are zeroed so
+they contribute nothing to the dk/dv reductions; interpret mode pads
+partial blocks with NaN, and 0 * NaN would otherwise poison a whole kv
+block).
 """
 from __future__ import annotations
 
@@ -37,11 +40,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# the masking rule and OOB zeroing are SHARED with the forward kernel: the
-# backward's softmax recompute p = exp(s - lse) is only valid against the
-# exact mask the forward's lse was built under
+# the masking rule, pos/seg sanitization, dead-tile predicate and OOB zeroing
+# are SHARED with the forward kernel: the backward's softmax recompute
+# p = exp(s - lse) is only valid against the exact mask the forward's lse was
+# built under
 from repro.kernels.flash_attention import (
     NEG_INF,
+    _load_pos_seg,
     _maybe_skip_dead_tile,
     tile_mask,
     zero_oob_rows,
@@ -76,8 +81,8 @@ def _p_ds(q, k, v, do, lse, delta, mask, scale):
     """Shared recompute: (p, dS) for one (BQ, BK) tile."""
     s = _dot(q * scale, k, ((1,), (1,)))  # (BQ, BK)
     s = jnp.where(mask, s, NEG_INF)
-    # exact zeros off-mask; fully-masked rows carry lse == NEG_INF and
-    # s == NEG_INF, so s - lse == 0 stays finite before the where kills it.
+    # exact zeros off-mask; fully-masked rows carry lse == NEG_INF, so the
+    # unmasked exp may overflow to inf there before the where kills it.
     p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
     dp = _dot(do, v, ((1,), (1,)))  # (BQ, BK)
     ds = p * (dp - delta[:, None]) * scale
@@ -85,9 +90,10 @@ def _p_ds(q, k, v, do, lse, delta, mask, scale):
 
 
 def _dq_kernel(
-    q_ref, k_ref, v_ref, lse_ref, delta_ref, do_ref, dq_ref, dq_scr,
+    q_ref, k_ref, v_ref, lse_ref, delta_ref, do_ref, qp_ref, kp_ref, qs_ref, ks_ref,
+    dq_ref, dq_scr,
     *, causal: bool, window: int, block_q: int, block_k: int, scale: float,
-    seq_q: int, seq_kv: int,
+    seq_q: int, seq_kv: int, implicit: bool,
 ):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
@@ -97,14 +103,19 @@ def _dq_kernel(
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
+    qp, qs = _load_pos_seg(qp_ref, qs_ref, iq, block_q, seq_q, seg_fill=-1)
+    kp, ks = _load_pos_seg(kp_ref, ks_ref, ik, block_k, seq_kv, seg_fill=-2)
+
     def _compute():
         q, do, lse, delta = _load_q_side(q_ref, do_ref, lse_ref, delta_ref, iq, block_q, seq_q)
         k, v = _load_kv_side(k_ref, v_ref, ik, block_k, seq_kv)
-        mask = tile_mask(iq, ik, block_q, block_k, seq_kv, causal, window, seq_q=seq_q)
+        mask = tile_mask(qp, kp, qs, ks, causal, window)
         _, ds = _p_ds(q, k, v, do, lse, delta, mask, scale)
         dq_scr[...] += _dot(ds, k, ((1,), (0,)))  # (BQ, D)
 
-    _maybe_skip_dead_tile(_compute, iq, ik, block_q, block_k, causal, window)
+    _maybe_skip_dead_tile(_compute, qp, kp, qs, ks, causal, window,
+                          implicit=implicit, iq=iq, ik=ik,
+                          block_q=block_q, block_k=block_k)
 
     @pl.when(ik == nk - 1)
     def _finalize():
@@ -112,10 +123,10 @@ def _dq_kernel(
 
 
 def _dkv_kernel(
-    q_ref, k_ref, v_ref, lse_ref, delta_ref, do_ref, dk_ref, dv_ref,
-    dk_scr, dv_scr,
+    q_ref, k_ref, v_ref, lse_ref, delta_ref, do_ref, qp_ref, kp_ref, qs_ref, ks_ref,
+    dk_ref, dv_ref, dk_scr, dv_scr,
     *, causal: bool, window: int, block_q: int, block_k: int, scale: float,
-    seq_q: int, seq_kv: int, nq: int, g: int,
+    seq_q: int, seq_kv: int, nq: int, g: int, implicit: bool,
 ):
     ik = pl.program_id(2)
     t = pl.program_id(3)  # inner sweep over (group member, q block) pairs
@@ -126,15 +137,20 @@ def _dkv_kernel(
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
+    qp, qs = _load_pos_seg(qp_ref, qs_ref, iq, block_q, seq_q, seg_fill=-1)
+    kp, ks = _load_pos_seg(kp_ref, ks_ref, ik, block_k, seq_kv, seg_fill=-2)
+
     def _compute():
         q, do, lse, delta = _load_q_side(q_ref, do_ref, lse_ref, delta_ref, iq, block_q, seq_q)
         k, v = _load_kv_side(k_ref, v_ref, ik, block_k, seq_kv)
-        mask = tile_mask(iq, ik, block_q, block_k, seq_kv, causal, window, seq_q=seq_q)
+        mask = tile_mask(qp, kp, qs, ks, causal, window)
         p, ds = _p_ds(q, k, v, do, lse, delta, mask, scale)
         dv_scr[...] += _dot(p, do, ((0,), (0,)))  # (BK, D)
         dk_scr[...] += _dot(ds, q, ((0,), (0,)))  # (BK, D)
 
-    _maybe_skip_dead_tile(_compute, iq, ik, block_q, block_k, causal, window)
+    _maybe_skip_dead_tile(_compute, qp, kp, qs, ks, causal, window,
+                          implicit=implicit, iq=iq, ik=ik,
+                          block_q=block_q, block_k=block_k)
 
     @pl.when(t == g * nq - 1)
     def _finalize():
@@ -142,14 +158,40 @@ def _dkv_kernel(
         dv_ref[0, :, 0, :] = dv_scr[...].astype(dv_ref.dtype)
 
 
+def check_bwd_shapes(q, k, v, lse, delta, do):
+    """Loud shape validation for the backward residual contract.
+
+    The old backward silently trusted its inputs — a mis-shaped lse/delta
+    (or a do that doesn't match q) would reduce garbage into dk/dv.
+    """
+    b, sq, h, d = q.shape
+    if do.shape != q.shape:
+        raise ValueError(f"flash_attention_bwd: do {do.shape} must match q {q.shape}")
+    if k.shape != v.shape:
+        raise ValueError(f"flash_attention_bwd: k {k.shape} must match v {v.shape}")
+    if k.shape[0] != b or k.shape[3] != d:
+        raise ValueError(
+            f"flash_attention_bwd: k {k.shape} incompatible with q {q.shape}"
+        )
+    for name, r in (("lse", lse), ("delta", delta)):
+        if r.shape != (b, h, sq):
+            raise ValueError(
+                f"flash_attention_bwd: {name} {r.shape} must be (B, H, Sq)="
+                f"{(b, h, sq)}"
+            )
+
+
 def flash_attention_bwd(
-    q, k, v, lse, delta, do,
+    q, k, v, lse, delta, do, q_pos, k_pos, q_seg, k_seg,
     *, causal: bool, window: int, block_q: int, block_k: int, interpret: bool,
+    implicit: bool = False,
 ):
     """Fused backward: (dq, dk, dv) in two pallas_calls.
 
-    q/do: (B,S,H,D); k/v: (B,Skv,KV,D); lse/delta: (B,H,S) f32.
+    q/do: (B,S,H,D); k/v: (B,Skv,KV,D); lse/delta: (B,H,S) f32;
+    q_pos/q_seg: (B,S) int32; k_pos/k_seg: (B,Skv) int32.
     """
+    check_bwd_shapes(q, k, v, lse, delta, do)
     b, sq, h, d = q.shape
     skv, kvh = k.shape[1], k.shape[2]
     g = h // kvh
@@ -157,20 +199,23 @@ def flash_attention_bwd(
     nk = -(-skv // block_k)
     scale = d**-0.5
     kw = dict(causal=causal, window=window, block_q=block_q, block_k=block_k,
-              scale=scale, seq_q=sq, seq_kv=skv)
+              scale=scale, seq_q=sq, seq_kv=skv, implicit=implicit)
 
     q_spec = pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0))
     kv_spec = pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0))
     row_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik: (b_, h_, iq))
+    qrow_spec = pl.BlockSpec((1, block_q), lambda b_, h_, iq, ik: (b_, iq))
+    krow_spec = pl.BlockSpec((1, block_k), lambda b_, h_, iq, ik: (b_, ik))
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, **kw),
         grid=(b, h, nq, nk),
-        in_specs=[q_spec, kv_spec, kv_spec, row_spec, row_spec, q_spec],
+        in_specs=[q_spec, kv_spec, kv_spec, row_spec, row_spec, q_spec,
+                  qrow_spec, krow_spec, qrow_spec, krow_spec],
         out_specs=pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
         out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
         interpret=interpret,
-    )(q, k, v, lse, delta, do)
+    )(q, k, v, lse, delta, do, q_pos, k_pos, q_seg, k_seg)
 
     # inner grid dim t = ig * nq + iq walks every query head of the GQA group
     # (head index j*g + t//nq) and every q block; the kv block (b, ik, j) is
@@ -180,10 +225,13 @@ def flash_attention_bwd(
     )
     kv_spec2 = pl.BlockSpec((1, block_k, 1, d), lambda b_, j, ik, t: (b_, ik, j, 0))
     row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, j, ik, t: (b_, j * g + t // nq, t % nq))
+    qrow_spec2 = pl.BlockSpec((1, block_q), lambda b_, j, ik, t: (b_, t % nq))
+    krow_spec2 = pl.BlockSpec((1, block_k), lambda b_, j, ik, t: (b_, ik))
     dk, dv = pl.pallas_call(
         functools.partial(_dkv_kernel, nq=nq, g=g, **kw),
         grid=(b, kvh, nk, g * nq),
-        in_specs=[q_spec2, kv_spec2, kv_spec2, row_spec2, row_spec2, q_spec2],
+        in_specs=[q_spec2, kv_spec2, kv_spec2, row_spec2, row_spec2, q_spec2,
+                  qrow_spec2, krow_spec2, qrow_spec2, krow_spec2],
         out_specs=[kv_spec2, kv_spec2],
         out_shape=[
             jax.ShapeDtypeStruct((b, skv, kvh, d), k.dtype),
@@ -194,7 +242,7 @@ def flash_attention_bwd(
             pltpu.VMEM((block_k, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, lse, delta, do)
+    )(q, k, v, lse, delta, do, q_pos, k_pos, q_seg, k_seg)
     return dq, dk, dv
 
 
@@ -203,10 +251,14 @@ def flash_attention_bwd(
 # ---------------------------------------------------------------------------
 
 
-def attention_bwd_ref(q, k, v, lse, delta, do, *, causal: bool, window: int = 0):
+def attention_bwd_ref(
+    q, k, v, lse, delta, do, *, causal: bool, window: int = 0,
+    q_pos=None, k_pos=None, q_seg=None, k_seg=None,
+):
     """jnp replica of the fused backward (differentiable; the 2nd-order path).
 
-    Same inputs as flash_attention_bwd; returns (dq, dk, dv) in input dtypes.
+    Same inputs as flash_attention_bwd (pos/seg optional — implicit arange
+    when omitted); returns (dq, dk, dv) in input dtypes.
     """
     b, sq, h, d = q.shape
     skv, kvh = k.shape[1], k.shape[2]
@@ -215,7 +267,9 @@ def attention_bwd_ref(q, k, v, lse, delta, do, *, causal: bool, window: int = 0)
     qf = q.astype(jnp.float32).reshape(b, sq, kvh, g, d)
     dof = do.astype(jnp.float32).reshape(b, sq, kvh, g, d)
     kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
-    mask = rf.attention_mask_2d(sq, skv, causal, window)[None, None, None]
+    mask = rf.attention_mask(
+        sq, skv, causal, window, q_pos=q_pos, k_pos=k_pos, q_seg=q_seg, k_seg=k_seg
+    )[:, None, None]  # (B|1, 1, 1, Sq, Skv)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * scale
     s = jnp.where(mask, s, NEG_INF)
     lse_r = lse.reshape(b, kvh, g, sq)

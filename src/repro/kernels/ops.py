@@ -235,16 +235,21 @@ def vmap_moments_flat(gs_tree, layout: ParamLayout, k: int) -> GradStats:
     return GradStats(mean=_fb(mean, layout), sq_mean=_fb(sq, layout), k=k)
 
 
-def flash_attention(qh, k, v, q_pos=None, k_pos=None, *, causal: bool = True, window: int = 0):
+def flash_attention(qh, k, v, q_pos=None, k_pos=None, *, q_seg=None, k_seg=None,
+                    causal: bool = True, window: int = 0):
     """Adapter for models/attention.py: qh (B,S,KV,G,D) -> (B,S,KV,G,D).
 
     Differentiable: the kernel carries a custom VJP whose backward runs the
     fused Pallas dq and dk/dv kernels (kernels/flash_attention_bwd.py), so
     use_pallas training keeps the whole attention fwd+bwd on the fused path.
-    Positions are assumed to be the implicit arange (train/prefill layout);
-    q_pos/k_pos ride along for signature parity with the jnp paths.
+    Positions/segments are explicit kernel operands (packed and offset
+    layouts run fused); omitted positions mean the implicit arange layout.
+    Segment ids are derived from the positions when not supplied.
     """
     b, s, kvh, g, d = qh.shape
     q = qh.reshape(b, s, kvh * g, d)
-    out = fa.flash_attention(q, k, v, causal=causal, window=window, interpret=_interpret())
+    out = fa.flash_attention(
+        q, k, v, q_pos, k_pos, q_seg, k_seg,
+        causal=causal, window=window, interpret=_interpret(),
+    )
     return out.reshape(b, s, kvh, g, d)

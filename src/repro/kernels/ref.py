@@ -89,16 +89,58 @@ def attention_mask_2d(sq: int, skv: int, causal: bool, window: int, q_offset: in
     return mask
 
 
-def attention_fwd_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
+def attention_mask(
+    sq: int, skv: int, causal: bool, window: int, q_offset: int = 0,
+    q_pos=None, k_pos=None, q_seg=None, k_seg=None,
+):
+    """(B | 1, Sq, Skv) validity mask — THE jnp home of the packed-position
+    masking contract (kernels/flash_attention.py implements the same rule
+    tile-wise).
+
+    Implicit layout (q_pos None): q_offset + arange(Sq) vs arange(Skv), one
+    segment.  Explicit layout: per-batch (B, S) int32 positions where pos < 0
+    marks padding, and segment ids (derived from positions when not given)
+    gate cross-document pairs with ``q_seg == k_seg``.
+    """
+    if q_pos is None:
+        return attention_mask_2d(sq, skv, causal, window, q_offset)[None]
+    if q_offset:
+        raise ValueError(
+            "attention_mask: q_offset is the IMPLICIT-layout parameter and is "
+            "ignored under explicit q_pos — fold the offset into q_pos instead"
+        )
+    from repro.kernels.flash_attention import segment_ids_from_positions
+
+    q_pos = jnp.asarray(q_pos, jnp.int32).reshape(-1, sq)
+    k_pos = jnp.asarray(k_pos, jnp.int32).reshape(-1, skv)
+    if q_seg is None:
+        q_seg = segment_ids_from_positions(q_pos)
+    if k_seg is None:
+        k_seg = segment_ids_from_positions(k_pos)
+    qp, kp = q_pos[:, :, None], k_pos[:, None, :]
+    mask = (qp >= 0) & (kp >= 0)
+    mask &= jnp.asarray(q_seg)[:, :, None] == jnp.asarray(k_seg)[:, None, :]
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    return mask
+
+
+def attention_fwd_ref(
+    q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0,
+    q_pos=None, k_pos=None, q_seg=None, k_seg=None,
+):
     """Naive attention oracle with the flash-kernel residual contract:
     returns (out (B,Sq,H,D), lse (B,H,Sq) f32).  GQA by h//g.
 
-    Positions are implicit: q_pos = q_offset + arange(Sq), k_pos = arange(Skv).
-    A query row with no valid kv position yields exactly 0 output and
-    lse = -1e30 (the flash-kernel convention), not the uniform average a
-    clamped softmax would produce.  This is THE jnp attention reference —
-    the second-order VJP fallback in kernels/flash_attention.py uses it too,
-    so the masking convention has a single jnp home.
+    Positions default to the implicit layout (q_offset + arange); explicit
+    q_pos/k_pos (+ optional segment ids) follow the packed-position contract
+    of attention_mask.  A query row with no valid kv position yields exactly
+    0 output and lse = -1e30 (the flash-kernel convention), not the uniform
+    average a clamped softmax would produce.  This is THE jnp attention
+    reference — the second-order VJP fallback in kernels/flash_attention.py
+    uses it too, so the masking convention has a single jnp home.
     """
     b, sq, h, d = q.shape
     kvh = k.shape[2]
@@ -106,10 +148,13 @@ def attention_fwd_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int =
     qh = q.reshape(b, sq, kvh, g, d)
     scale = d**-0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32), k.astype(jnp.float32)) * scale
-    mask = attention_mask_2d(sq, k.shape[1], causal, window, q_offset)
-    s = jnp.where(mask[None, None, None], s, -1e30)
+    mask = attention_mask(
+        sq, k.shape[1], causal, window, q_offset,
+        q_pos=q_pos, k_pos=k_pos, q_seg=q_seg, k_seg=k_seg,
+    )[:, None, None]  # (B | 1, 1, 1, Sq, Skv)
+    s = jnp.where(mask, s, -1e30)
     m = jnp.max(s, axis=-1)
-    p = jnp.where(mask[None, None, None], jnp.exp(s - m[..., None]), 0.0)
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
     l = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
     valid = l > 0.0
@@ -119,6 +164,12 @@ def attention_fwd_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int =
     return out, lse.reshape(b, h, sq)
 
 
-def attention_ref(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0):
+def attention_ref(
+    q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0,
+    q_pos=None, k_pos=None, q_seg=None, k_seg=None,
+):
     """attention_fwd_ref's output without the LSE residual."""
-    return attention_fwd_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)[0]
+    return attention_fwd_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        q_pos=q_pos, k_pos=k_pos, q_seg=q_seg, k_seg=k_seg,
+    )[0]

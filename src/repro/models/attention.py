@@ -11,15 +11,20 @@ Three execution paths:
                  in kernels/flash_attention.py.
   * kernel     — pl.pallas_call flash attention (TPU target); enabled via
                  ParallelismConfig.use_pallas for self-attention TRAIN and
-                 prefill (the kernel carries a custom VJP with fused Pallas
-                 backward kernels — kernels/flash_attention_bwd.py), falls
-                 back to chunked for decode and cross-attention, where kv
-                 positions are cache-explicit rather than the implicit
-                 arange the kernel assumes.
+                 prefill.  The kernel carries a custom VJP with fused Pallas
+                 backward kernels (kernels/flash_attention_bwd.py) and takes
+                 EXPLICIT position/segment operands, so packed and offset
+                 position layouts run fused too — only decode and
+                 cross-attention (ragged cache-explicit kv) fall back to the
+                 jnp paths.
 
-KV caches are position-explicit: each slot stores its absolute position
-(`kpos`, -1 = empty) so full caches and sliding-window ring buffers share one
-masking rule:   valid & kpos <= q_pos & (window == 0 | kpos > q_pos - window).
+All three paths share one masking contract: positions < 0 are padding,
+causal/window compare absolute positions, and segment ids — derived from
+positions by segment_ids_from_positions (a new segment wherever the position
+does not increase by exactly 1) — gate cross-document attention in packed
+rows.  KV caches are position-explicit: each slot stores its absolute
+position (`kpos`, -1 = empty) so full caches and sliding-window ring buffers
+share the same rule.
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.flash_attention import segment_ids_from_positions
 from repro.models.common import apply_rope, normal_init
 
 NEG_INF = -1e30
@@ -53,11 +59,20 @@ def _merge_heads(x: jnp.ndarray) -> jnp.ndarray:
     return x.reshape(b, s, h * d)
 
 
-def _mask(q_pos, k_pos, causal: bool, window: int):
-    """q_pos: (B, Sq); k_pos: (B, Skv). Returns bool (B, Sq, Skv)."""
+def _mask(q_pos, k_pos, causal: bool, window: int, q_seg=None, k_seg=None):
+    """q_pos: (B, Sq); k_pos: (B, Skv); optional segment ids of the same
+    shapes (None = no segment gating, e.g. decode over a cache or
+    cross-attention — deliberately unlike ref.attention_mask, which derives
+    segments from explicit positions).  Returns bool (B, Sq, Skv).
+
+    The packed-position rule itself lives in ref.attention_mask / kernel
+    tile_mask; with segments supplied this must match them term for term —
+    pinned by tests/test_models.py::test_mask_matches_ref_contract."""
     qp = q_pos[:, :, None]
     kp = k_pos[:, None, :]
-    m = kp >= 0
+    m = (kp >= 0) & (qp >= 0)
+    if q_seg is not None:
+        m &= q_seg[:, :, None] == k_seg[:, None, :]
     if causal:
         m &= kp <= qp
     if window > 0:
@@ -77,14 +92,20 @@ def _sdpa(q, k, v, mask) -> jnp.ndarray:
     return jnp.einsum("bkgqs,bskd->bqkgd", w, v)
 
 
-def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, q_chunk, kv_chunk):
+def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, q_chunk, kv_chunk,
+                  q_seg=None, k_seg=None):
     """Online-softmax attention; same signature/result as _sdpa but O(chunk^2) memory.
 
     Outer scan over q chunks, inner scan over kv chunks carrying the running
-    (max, denominator, accumulator) triple.
+    (max, denominator, accumulator) triple.  Segment ids (None = no segment
+    gating) ride the same chunking as the positions.
     """
     b, sq, kh, g, d = q.shape
     skv = k.shape[1]
+    # all-zero segments == no segment gating; keeps the scans uniform
+    if q_seg is None:
+        q_seg = jnp.zeros_like(q_pos)
+        k_seg = jnp.zeros_like(k_pos)
     q_chunk = min(q_chunk, sq)
     kv_chunk = min(kv_chunk, skv)
     # pad to multiples
@@ -92,28 +113,32 @@ def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, q_chunk, kv_chunk):
     pk = (-skv) % kv_chunk
     if pq:
         q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
-        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=0)
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+        q_seg = jnp.pad(q_seg, ((0, 0), (0, pq)), constant_values=-1)
     if pk:
         k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
         k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=-1)
+        k_seg = jnp.pad(k_seg, ((0, 0), (0, pk)), constant_values=-2)
     nq, nk = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
     scale = d**-0.5
 
     qs = q.reshape(b, nq, q_chunk, kh, g, d).transpose(1, 0, 2, 3, 4, 5)
     qps = q_pos.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+    qss = q_seg.reshape(b, nq, q_chunk).transpose(1, 0, 2)
     ks = k.reshape(b, nk, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
     vs = v.reshape(b, nk, kv_chunk, kh, d).transpose(1, 0, 2, 3, 4)
     kps = k_pos.reshape(b, nk, kv_chunk).transpose(1, 0, 2)
+    kss = k_seg.reshape(b, nk, kv_chunk).transpose(1, 0, 2)
 
     def q_step(_, qc):
-        qb, qp = qc  # (B,Cq,K,G,D), (B,Cq)
+        qb, qp, qg = qc  # (B,Cq,K,G,D), (B,Cq), (B,Cq)
 
         def kv_step(carry, kc):
             m_run, l_run, acc = carry
-            kb, vb, kp = kc
+            kb, vb, kp, kg = kc
             s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32) * scale
-            msk = _mask(qp, kp, causal, window)[:, None, None, :, :]
+            msk = _mask(qp, kp, causal, window, qg, kg)[:, None, None, :, :]
             s = jnp.where(msk, s, NEG_INF)
             m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
             # exact zeros off-mask (a fully-masked chunk has s == m == NEG_INF
@@ -129,12 +154,12 @@ def _chunked_sdpa(q, k, v, q_pos, k_pos, causal, window, q_chunk, kv_chunk):
         m0 = jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
         a0 = jnp.zeros((b, kh, g, q_chunk, d), jnp.float32)
-        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps, kss))
         # l == 0 means the whole row was masked: emit exact 0, not acc/eps
         out = jnp.where(l_f[..., None] > 0, acc / jnp.maximum(l_f, 1e-30)[..., None], 0.0)
         return None, out.transpose(0, 3, 1, 2, 4)  # (B,Cq,K,G,D)
 
-    _, outs = jax.lax.scan(q_step, None, (qs, qps))  # (nq,B,Cq,K,G,D)
+    _, outs = jax.lax.scan(q_step, None, (qs, qps, qss))  # (nq,B,Cq,K,G,D)
     out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, kh, g, d)
     return out[:, :sq].astype(v.dtype)
 
@@ -157,17 +182,27 @@ def attention(
     attn_chunk: int = 1024,
     cache_len: int = 0,
     use_pallas: bool = False,
-    implicit_pos: bool = False,
+    implicit_layout: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Self- or cross-attention.
 
     mode: "train" (no cache), "prefill" (returns fresh cache), "decode"
     (consumes/returns cache; x is (B, 1, d)).
     memory: (B, M, d) for cross-attention (causal/window ignored).
-    implicit_pos: q_pos is the plain broadcast arange(S) — the layout the
-    Pallas kernel assumes.  Deliberately opt-IN (default False): a caller
-    that forgets it merely misses the fused path; defaulting True would let
-    packed/offset positions silently reach a kernel that arange-masks them.
+    q_pos: (B, S) int32 absolute positions; pos < 0 marks padding.  Packed
+    and offset layouts are first-class for train/prefill attention math:
+    segment ids are derived from the positions
+    (segment_ids_from_positions) and gate cross-document attention on the
+    jnp paths AND the fused kernel — the old ``implicit_pos`` jnp fallback
+    is gone.  NOT segment-aware: the prefill cache scatter (slot = pos % c
+    assumes one document per row — packed rows would collide slots) and
+    decode over a cache (seg=None) — packed rows are a training/prefill-
+    attention layout, not a serving cache layout (see ROADMAP).
+    implicit_layout: static hint that q_pos is the plain broadcast
+    arange(S).  Purely a fast path, NOT a correctness gate (explicit
+    positions run fused regardless): it keeps the kernel on the free
+    grid-index dead-tile predicate and skips the segment-id cumsum — the
+    derived segments of an arange are identically zero.
     Returns (out (B,S,d), cache or None).
     """
     b, s, _ = x.shape
@@ -216,11 +251,16 @@ def attention(
                 k_in, v_in, pos_in = k[:, -c:], v[:, -c:], q_pos[:, -c:]
             else:
                 k_in, v_in, pos_in = k, v, q_pos
-            slot = pos_in % c
+            # pads (pos < 0) must NOT scatter: jnp's (-1) % c == c - 1 would
+            # evict the real entry in the last ring slot — route them out of
+            # bounds and drop the write.  (Packed MULTI-document rows remain
+            # unsupported here: duplicate per-document positions collide
+            # slots — see the docstring + ROADMAP.)
+            slot = jnp.where(pos_in >= 0, pos_in % c, c)
             bidx = jnp.arange(b)[:, None]
-            ck = ck.at[bidx, slot].set(k_in)
-            cv = cv.at[bidx, slot].set(v_in)
-            ckpos = ckpos.at[bidx, slot].set(pos_in)
+            ck = ck.at[bidx, slot].set(k_in, mode="drop")
+            cv = cv.at[bidx, slot].set(v_in, mode="drop")
+            ckpos = ckpos.at[bidx, slot].set(pos_in, mode="drop")
             new_cache = {"k": ck, "v": cv, "kpos": ckpos}
             if mode == "decode":
                 k, v, k_pos = ck, cv, ckpos
@@ -229,20 +269,36 @@ def attention(
 
     qh = q.reshape(b, s, n_kv_heads, g, head_dim)
     naive_elems = s * k.shape[1]
-    if use_pallas and implicit_pos and mode in ("train", "prefill") and not cross and k.shape[1] == s:
+    # self-attention train/prefill attends the fresh sequence against itself
+    # (k_pos is q_pos): derive the segment ids ONCE here and share them with
+    # whichever path runs, so packed rows mask identically everywhere.
+    # Decode (ring-buffer cache) and cross-attention keep seg=None — their kv
+    # positions are cache-/memory-explicit and carry no packing structure —
+    # and so does the implicit arange layout (segments identically zero).
+    self_fresh = not cross and mode in ("train", "prefill")
+    derive_segs = self_fresh and not implicit_layout
+    q_seg = k_seg = segment_ids_from_positions(q_pos) if derive_segs else None
+    if use_pallas and self_fresh and k.shape[1] == s:
         # Fused path for train AND prefill: the kernel carries a custom VJP
         # (fused dq and dk/dv Pallas kernels), so the training forward and
-        # backward both stay on Pallas.  Gated on implicit_pos — the kernel
-        # masks with the implicit arange, so packed/offset position layouts
-        # fall back to the position-explicit jnp paths below, as do
-        # decode and cross-attention (cache-explicit positions).
+        # backward both stay on Pallas.  The kernel takes the positions and
+        # segment ids as operands — packed/offset layouts run fused too.
+        # The implicit layout passes NO positions: the kernel materializes
+        # the arange itself and keeps the static grid-index dead-tile skip.
         from repro.kernels import ops as kops
 
-        out = kops.flash_attention(qh, k, v, q_pos, k_pos, causal=causal, window=window)
+        if implicit_layout:
+            out = kops.flash_attention(qh, k, v, causal=causal, window=window)
+        else:
+            out = kops.flash_attention(
+                qh, k, v, q_pos, k_pos, q_seg=q_seg, k_seg=k_seg,
+                causal=causal, window=window,
+            )
     elif attn_chunk and naive_elems > attn_chunk * attn_chunk * 4:
-        out = _chunked_sdpa(qh, k, v, q_pos, k_pos, causal, window, attn_chunk, attn_chunk)
+        out = _chunked_sdpa(qh, k, v, q_pos, k_pos, causal, window, attn_chunk,
+                            attn_chunk, q_seg=q_seg, k_seg=k_seg)
     else:
-        mask = _mask(q_pos, k_pos, causal, window)
+        mask = _mask(q_pos, k_pos, causal, window, q_seg, k_seg)
         out = _sdpa(qh, k, v, mask)  # (B,Sq,K,G,D)
     out = _merge_heads(out.reshape(b, s, n_heads, head_dim))
     return out @ p["wo"].astype(dtype), new_cache

@@ -95,7 +95,7 @@ def _block_apply(
     mode: str,
     cache_len: int,
     causal: bool,
-    implicit_pos: bool,
+    implicit_layout: bool,
 ) -> Tuple[jnp.ndarray, Optional[Dict], Dict]:
     aux = _aux_zero()
     new_cache: Optional[Dict] = None
@@ -108,7 +108,7 @@ def _block_apply(
         mode=mode,
         attn_chunk=pcfg.attn_chunk,
         use_pallas=pcfg.use_pallas,
-        implicit_pos=implicit_pos,
+        implicit_layout=implicit_layout,
     )
     if kind in ("attn", "swa", "local", "xattn"):
         window = cfg.sliding_window if kind in ("swa", "local") else 0
@@ -218,7 +218,7 @@ def encode(cfg: ModelConfig, pcfg: ParallelismConfig, params: Dict, frames: jnp.
     for lp in params["encoder"]["layers"]:
         x, _, _ = _block_apply(
             cfg, pcfg, "attn", lp, x, q_pos=pos, memory=None, cache=None, mode="train",
-            cache_len=0, causal=False, implicit_pos=True,
+            cache_len=0, causal=False, implicit_layout=True,
         )
     return apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
 
@@ -253,9 +253,12 @@ def forward(
     n_groups, tail = cfg.n_groups(), cfg.tail_kinds()
     dtype = jnp.dtype(pcfg.compute_dtype)
     b, s = tokens.shape
-    # implicit_pos gates the fused attention kernel, which masks with the
-    # plain arange; packed/offset position layouts keep the jnp paths
-    implicit_pos = positions is None
+    # positions are first-class in train/prefill (the fused kernel takes
+    # pos/segment operands), so explicit packed/offset layouts train fused.
+    # implicit_layout is a static FAST-PATH hint (free grid-index dead-tile
+    # predicate, no segment cumsum), not a dispatch gate like the retired
+    # implicit_pos fallback.
+    implicit_layout = positions is None
     if positions is None:
         q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     elif positions.ndim == 1:
@@ -277,7 +280,8 @@ def forward(
         return _block_apply(
             cfg, pcfg, kind, p, xx,
             q_pos=q_pos, memory=memory, cache=blk_cache, mode=mode,
-            cache_len=cache_len, causal=cfg.causal, implicit_pos=implicit_pos,
+            cache_len=cache_len, causal=cfg.causal,
+            implicit_layout=implicit_layout,
         )
 
     group_caches = None

@@ -26,6 +26,8 @@ def make_loss_fn(cfg: Config, with_aux: bool = True):
     """loss_fn(params, batch) -> (loss, metrics) for the trainer / grad_stats.
 
     batch: {"tokens": (B,S) int32, "targets": (B,S) int32, optional "mask",
+            optional "positions" (B,S) int32 (packed/offset layouts — pads
+            carry position -1 and should be masked out of the loss),
             optional "image" (B,N,d) / "frames" (B,F,d)}.
     """
     m, p = cfg.model, cfg.parallel
@@ -36,10 +38,18 @@ def make_loss_fn(cfg: Config, with_aux: bool = True):
             extra["image"] = batch["image"]
         if "frames" in batch:
             extra["frames"] = batch["frames"]
+        positions = batch.get("positions")
         logits, aux, _ = forward(
-            m, p, params, batch["tokens"], extra=extra or None, mode="train"
+            m, p, params, batch["tokens"], extra=extra or None, mode="train",
+            positions=positions,
         )
-        ce = cross_entropy(logits, batch["targets"], batch.get("mask"))
+        mask = batch.get("mask")
+        if mask is None and positions is not None and positions.ndim == 2:
+            # packed layouts mark pads with position -1; without an explicit
+            # mask those slots must still not train against the pad-fill
+            # targets (their logits are the zero-output attention rows)
+            mask = positions >= 0
+        ce = cross_entropy(logits, batch["targets"], mask)
         total = ce + aux["moe_lb_loss"] + aux["moe_z_loss"]
         metrics = {"ce": ce, **aux}
         if not with_aux:

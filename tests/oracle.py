@@ -163,6 +163,89 @@ def run_attention_grads(case: Sequence, seed: int = 0, dtype=jnp.float32):
 
 
 # ---------------------------------------------------------------------------
+# Packed-sequence differential harness: explicit position/segment layouts
+# (the hostile grid the position-aware kernels are certified against)
+# ---------------------------------------------------------------------------
+
+# Each case: (B, S, H, KV, D, window, rows) with rows = per-batch-row tuples
+# of (doc_len, position_offset) documents; tokens after the documents are a
+# padded tail (position -1).  Layouts chosen against BLOCK=128 tiling:
+#   * ragged multi-segment packs (boundaries inside a block),
+#   * a segment boundary EXACTLY at the 128 block edge,
+#   * single-token segments (degenerate one-row documents),
+#   * a fully-padded tail long enough to cover a whole dead tile,
+#   * offset (kv-cache continuation) positions,
+#   * MQA (KV=1) and GQA over packed rows,
+#   * a sliding window crossing packed-document boundaries,
+#   * B=2 with a DIFFERENT packing per batch row.
+PACKED_ATTN_CASES = {
+    "multi_segment": (1, 200, 4, 2, 32, 0, (((70, 0), (55, 0), (40, 0)),)),
+    "block_edge": (1, 256, 4, 4, 32, 0, (((128, 0), (128, 0)),)),
+    "single_token_segs": (
+        1, 130, 4, 2, 32, 0, (((1, 0), (1, 0), (1, 0), (60, 0), (1, 0), (40, 0), (1, 0)),),
+    ),
+    "padded_tail_mqa": (1, 192, 4, 1, 32, 0, (((100, 0), (28, 0)),)),
+    "offset_cached": (1, 130, 4, 2, 32, 0, (((130, 100),),)),
+    "window_packed": (1, 200, 6, 3, 32, 37, (((120, 0), (60, 0)),)),
+    "two_rows_differ": (2, 160, 4, 2, 32, 0, (((90, 0), (50, 0), (20, 0)), ((160, 0),))),
+}
+PACKED_SMOKE = ("multi_segment", "block_edge", "padded_tail_mqa")
+
+
+def packed_positions(seq: int, docs: Sequence[Tuple[int, int]]) -> np.ndarray:
+    """1-D int32 positions: concatenated ``offset + arange(len)`` document
+    runs, -1 on the padded tail."""
+    pos = np.full(seq, -1, np.int32)
+    o = 0
+    for n, off in docs:
+        if o + n > seq:
+            raise ValueError(f"docs overflow seq {seq}")
+        pos[o : o + n] = off + np.arange(n, dtype=np.int32)
+        o += n
+    return pos
+
+
+def packed_case_inputs(case: Sequence, seed: int = 0, dtype=jnp.float32):
+    """(q, k, v, pos, t) for one PACKED_ATTN_CASES entry (self-attention:
+    k_pos == q_pos == ``pos``)."""
+    b, s, h, kvh, d, window, rows = case
+    assert len(rows) == b
+    pos = jnp.asarray(np.stack([packed_positions(s, r) for r in rows]))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), dtype)
+    t = jax.random.normal(ks[3], (b, s, h, d), jnp.float32)
+    return q, k, v, pos, t
+
+
+def run_packed_attention_grads(case: Sequence, seed: int = 0, dtype=jnp.float32):
+    """Forward + (dq, dk, dv), Pallas kernel vs jnp oracle, on one packed
+    layout (explicit positions, derived segments, causal)."""
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    window = case[5]
+    q, k, v, pos, t = packed_case_inputs(case, seed, dtype)
+
+    def kfn(q_, k_, v_):
+        return flash_attention(q_, k_, v_, pos, pos, causal=True, window=window)
+
+    def rfn(q_, k_, v_):
+        return ref.attention_ref(
+            q_, k_, v_, causal=True, window=window, q_pos=pos, k_pos=pos
+        )
+
+    def loss(fn):
+        return lambda q_, k_, v_: jnp.sum(fn(q_, k_, v_).astype(jnp.float32) * t)
+
+    out_k, out_r = kfn(q, k, v), rfn(q, k, v)
+    grads_k = jax.grad(loss(kfn), argnums=(0, 1, 2))(q, k, v)
+    grads_r = jax.grad(loss(rfn), argnums=(0, 1, 2))(q, k, v)
+    return (out_k, out_r), (grads_k, grads_r)
+
+
+# ---------------------------------------------------------------------------
 # Per-leaf reference dispatch (PR 1's kernels/ops.py loops, kept here as the
 # oracle the single-launch flat path is differentially certified against)
 # ---------------------------------------------------------------------------

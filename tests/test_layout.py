@@ -195,6 +195,69 @@ def test_flash_attention_train_vjp_launch_counts():
     assert count_pallas_calls(grad) == 3, grad
 
 
+def test_packed_flash_attention_launch_counts():
+    """The PACKED path is structurally identical to the implicit-arange path:
+    explicit positions/segments ride the same pallas_calls as extra operands
+    — primal 1, jax.grad exactly 3 (LSE fwd + dq + fused dk/dv).  A packing
+    gate regression (packed layouts falling back to jnp) changes the count."""
+    import oracle as orc
+
+    from repro.kernels.flash_attention import flash_attention
+
+    case = orc.PACKED_ATTN_CASES["multi_segment"]
+    q, k, v, pos, _ = orc.packed_case_inputs(case, seed=0)
+    fn = lambda *a: flash_attention(*a, pos, pos, causal=True)
+    primal = jax.make_jaxpr(fn)(q, k, v)
+    assert count_pallas_calls(primal) == 1, primal
+    grad = jax.make_jaxpr(
+        jax.grad(lambda *a: jnp.sum(fn(*a)), argnums=(0, 1, 2))
+    )(q, k, v)
+    assert count_pallas_calls(grad) == 3, grad
+
+
+def test_packed_batch_attention_is_on_the_fused_path():
+    """Structural regression for the retired implicit_pos gate: a packed
+    batch (explicit positions) must NOT produce zero pallas_calls in the
+    model forward jaxpr — the exact failure mode of the old fallback."""
+    import dataclasses
+
+    from repro.configs import get_smoke
+    from repro.models import forward, init_params
+
+    cfg = get_smoke("granite-3-2b")
+    pc = dataclasses.replace(cfg.parallel, use_pallas=True)
+    params = init_params(cfg.model, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.model.vocab_size)
+    packed = jnp.concatenate(
+        [jnp.arange(8, dtype=jnp.int32), jnp.arange(8, dtype=jnp.int32)]
+    )[None, :].repeat(2, axis=0)
+    jx = jax.make_jaxpr(
+        lambda t, p: forward(cfg.model, pc, params, t, positions=p)[0]
+    )(tokens, packed)
+    assert count_pallas_calls(jx) == 1, jx
+
+
+def test_packed_full_train_step_launch_count():
+    """End to end on a PACKED batch (positions/segments from the data
+    packer): the same 7 structural pallas_calls as the implicit-arange step
+    — attention fwd + remat recompute + dq + dk/dv + 2 stats + 1 update."""
+    from repro.configs import get_smoke
+    from repro.data import packed_lm_batches
+    from repro.train import init_state, make_loss_fn, make_train_step
+
+    cfg = get_smoke("granite-3-2b").replace(global_batch=8, seq_len=16)
+    cfg = cfg.replace(
+        optimizer=dataclasses.replace(cfg.optimizer, name="vr_lamb", k=4),
+        parallel=dataclasses.replace(cfg.parallel, use_pallas=True),
+    )
+    batch = next(iter(packed_lm_batches(cfg.model.vocab_size, 8, 16, seed=0)))
+    assert int((batch["segments"].max(axis=1) > 0).sum()) > 0  # really packed
+    state = init_state(cfg)
+    step_fn, _ = make_train_step(cfg, make_loss_fn(cfg))
+    jaxpr = jax.make_jaxpr(step_fn)(state, batch)
+    assert count_pallas_calls(jaxpr) == 7, count_pallas_calls(jaxpr)
+
+
 def test_full_train_step_launch_count():
     """End to end (fresh VR-LAMB step, use_pallas): the whole hot loop is
     Pallas.  Exactly 7 structural pallas_calls, regardless of leaf count:

@@ -141,7 +141,10 @@ def test_flash_attention_fully_masked_rows_are_zero():
     """A query row with NO valid kv position (here: q past the end of a short
     kv sequence under window=1, hitting the partial first kv block) must give
     exactly 0 forward output and exactly 0, finite gradients — the old
-    max(l, 1e-30) clamp silently produced a uniform average over kv."""
+    max(l, 1e-30) clamp silently produced a uniform average over kv.
+
+    Sq != Skv now requires explicit positions (the implicit-arange alignment
+    is ambiguous and raises — see test_bwd_rejects_implicit_sq_neq_skv)."""
     from repro.kernels import ref
     from repro.kernels.flash_attention import flash_attention
 
@@ -149,15 +152,241 @@ def test_flash_attention_fully_masked_rows_are_zero():
     q = jax.random.normal(ks[0], (1, 8, 2, 16))
     k = jax.random.normal(ks[1], (1, 4, 2, 16))
     v = jax.random.normal(ks[2], (1, 4, 2, 16))
-    out = flash_attention(q, k, v, causal=True, window=1)
-    exp = ref.attention_ref(q, k, v, causal=True, window=1)
+    qp = jnp.arange(8, dtype=jnp.int32)[None]
+    kp = jnp.arange(4, dtype=jnp.int32)[None]
+    out = flash_attention(q, k, v, qp, kp, causal=True, window=1)
+    exp = ref.attention_ref(q, k, v, causal=True, window=1, q_pos=qp, k_pos=kp)
     # rows 4.. have no kv with kpos == qpos: exactly zero, kernel and oracle
     np.testing.assert_array_equal(np.asarray(out)[:, 4:], 0.0)
     np.testing.assert_array_equal(np.asarray(exp)[:, 4:], 0.0)
     oracle.assert_trees_close(out, exp, msg="fully-masked fwd", atol=2e-3, rtol=2e-3)
-    dq = jax.grad(lambda q_: jnp.sum(flash_attention(q_, k, v, causal=True, window=1)))(q)
+    dq = jax.grad(
+        lambda q_: jnp.sum(flash_attention(q_, k, v, qp, kp, causal=True, window=1))
+    )(q)
     assert bool(jnp.all(jnp.isfinite(dq)))
     np.testing.assert_array_equal(np.asarray(dq)[:, 4:], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# packed-sequence certification grid: explicit positions + derived segments,
+# kernel vs ref.attention_fwd_ref under jax.grad (tests/oracle.py harness).
+# The smoke subset runs in tier-1; the exhaustive grid (every hostile layout
+# x dtype) is `slow`.
+# ---------------------------------------------------------------------------
+
+PACKED_TOL = dict(atol=2e-3, rtol=2e-3)
+
+
+def _assert_packed_case(name, dtype):
+    case = oracle.PACKED_ATTN_CASES[name]
+    (out_k, out_r), (grads_k, grads_r) = oracle.run_packed_attention_grads(
+        case, seed=sum(case[:5]), dtype=dtype
+    )
+    tol = PACKED_TOL if dtype == jnp.float32 else dict(atol=5e-2, rtol=5e-2)
+    oracle.assert_trees_close(out_k, out_r, msg=f"packed fwd {name}", **tol)
+    for gname, a, b in zip(("dq", "dk", "dv"), grads_k, grads_r):
+        oracle.assert_trees_close(a, b, msg=f"packed {gname} {name}", **tol)
+
+
+@pytest.mark.parametrize("name", oracle.PACKED_SMOKE)
+def test_packed_attention_grad_oracle_smoke(name):
+    """Tier-1 subset of the packed grid: multi-segment ragged pack, segment
+    boundary exactly at the 128 block edge, fully-padded tail + MQA."""
+    _assert_packed_case(name, jnp.float32)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(oracle.PACKED_ATTN_CASES))
+@pytest.mark.parametrize("dtype", oracle.DTYPES, ids=("f32", "bf16"))
+def test_packed_attention_grad_oracle_full(name, dtype):
+    """The exhaustive hostile grid: every packed layout (single-token
+    segments, offset/cached positions, windows crossing document boundaries,
+    per-row differing packings) x f32/bf16, fwd AND dq/dk/dv."""
+    _assert_packed_case(name, dtype)
+
+
+def test_packed_cross_segment_attention_is_zero():
+    """Cross-document attention in a packed row is PROVABLY zero: perturbing
+    document 2's k/v leaves document 1's outputs bitwise unchanged (masked
+    scores are the constant NEG_INF either way, so even the accumulation
+    order is identical), and the dk/dv of a loss that reads only document 1
+    vanish identically on document 2's rows."""
+    from repro.kernels.flash_attention import flash_attention
+
+    case = oracle.PACKED_ATTN_CASES["multi_segment"]
+    n0 = case[6][0][0][0]  # first document length
+    q, k, v, pos, _ = oracle.packed_case_inputs(case, seed=11)
+    out = flash_attention(q, k, v, pos, pos, causal=True)
+    k2 = k.at[:, n0:].multiply(-3.0)
+    v2 = v.at[:, n0:].add(7.0)
+    out2 = flash_attention(q, k2, v2, pos, pos, causal=True)
+    np.testing.assert_array_equal(np.asarray(out[:, :n0]), np.asarray(out2[:, :n0]))
+
+    def doc1_loss(k_, v_):
+        return jnp.sum(flash_attention(q, k_, v_, pos, pos, causal=True)[:, :n0])
+
+    dk, dv = jax.grad(doc1_loss, argnums=(0, 1))(k, v)
+    np.testing.assert_array_equal(np.asarray(dk)[:, n0:], 0.0)
+    np.testing.assert_array_equal(np.asarray(dv)[:, n0:], 0.0)
+    assert float(jnp.max(jnp.abs(dk))) > 0  # doc-1 rows do carry gradient
+
+
+def test_packed_padded_tail_rows_are_zero():
+    """Pad rows (position -1) emit exactly 0 forward output and exactly 0,
+    finite gradients on the fused path — including the fully dead tile the
+    padded_tail_mqa layout parks beyond the 128 block edge."""
+    from repro.kernels.flash_attention import flash_attention
+
+    case = oracle.PACKED_ATTN_CASES["padded_tail_mqa"]
+    used = sum(n for n, _ in case[6][0])
+    q, k, v, pos, _ = oracle.packed_case_inputs(case, seed=4)
+    out = flash_attention(q, k, v, pos, pos, causal=True)
+    np.testing.assert_array_equal(np.asarray(out)[:, used:], 0.0)
+    dq = jax.grad(lambda q_: jnp.sum(flash_attention(q_, k, v, pos, pos, causal=True)))(q)
+    assert bool(jnp.all(jnp.isfinite(dq)))
+    np.testing.assert_array_equal(np.asarray(dq)[:, used:], 0.0)
+
+
+def test_packed_grad_of_grad_composes():
+    """Second-order autodiff through the packed fused path falls back to the
+    jnp replicas WITH the packed positions — segments must gate the 2nd-order
+    math too, not just the first-order kernels."""
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 48, 4, 16))
+    k = jax.random.normal(ks[1], (1, 48, 2, 16))
+    v = jax.random.normal(ks[2], (1, 48, 2, 16))
+    pos = jnp.asarray(oracle.packed_positions(48, ((30, 0), (18, 0))))[None]
+
+    def gradnorm(fn):
+        f = lambda q_: jnp.sum(jnp.tanh(fn(q_)))
+        return lambda q_: jnp.sum(jax.grad(f)(q_) ** 2)
+
+    gg_k = jax.grad(gradnorm(lambda q_: flash_attention(q_, k, v, pos, pos, causal=True)))(q)
+    gg_r = jax.grad(
+        gradnorm(lambda q_: ref.attention_ref(q_, k, v, causal=True, q_pos=pos, k_pos=pos))
+    )(q)
+    oracle.assert_trees_close(gg_k, gg_r, msg="packed grad-of-grad", atol=2e-3, rtol=2e-3)
+
+
+def test_tile_reachable_never_kills_live_tiles():
+    """Seeded fuzz pinning the dead-tile predicates to the mask: whenever
+    tile_reachable(...) is False, tile_mask(...) must be all-False for the
+    same sanitized pos/seg vectors (a false kill silently zeroes real
+    attention), and for implicit arange layouts the dynamic predicate may
+    never be stricter than the static grid-index one."""
+    from repro.kernels.flash_attention import (
+        tile_mask,
+        tile_reachable,
+        tile_reachable_static,
+    )
+
+    rng = np.random.RandomState(0)
+    bq = bk = 8
+    for trial in range(200):
+        causal = bool(rng.rand() < 0.7)
+        window = int(rng.choice((0, 1, 3, 11)))
+        mode = rng.rand()
+        if mode < 0.5:  # random packed-ish: arange runs + pads
+            def mk(n):
+                pos = np.full(n, -1, np.int64)
+                o = 0
+                while o < n and rng.rand() < 0.9:
+                    ln = int(rng.randint(1, n - o + 1))
+                    pos[o : o + ln] = rng.randint(0, 4) + np.arange(ln)
+                    o += ln
+                seg = np.cumsum(np.concatenate([[1], pos[1:] != pos[:-1] + 1])) - 1
+                seg = np.where(pos < 0, -1, seg)
+                return jnp.asarray(pos), jnp.asarray(seg)
+
+            qp, qs = mk(bq)
+            kp, ks = mk(bk)
+        else:  # fully random sanitized vectors (hostile, non-monotonic)
+            qp = jnp.asarray(rng.randint(-1, 12, bq))
+            kp = jnp.asarray(rng.randint(-1, 12, bk))
+            qs = jnp.asarray(np.where(np.asarray(qp) < 0, -1, rng.randint(0, 3, bq)))
+            ks = jnp.asarray(np.where(np.asarray(kp) < 0, -2, rng.randint(0, 3, bk)))
+        live = bool(tile_reachable(qp, kp, qs, ks, causal, window))
+        mask_any = bool(jnp.any(tile_mask(qp, kp, qs, ks, causal, window)))
+        assert live or not mask_any, (trial, causal, window, qp, kp, qs, ks)
+    # implicit arange over a 2x2 tile grid: dynamic predicate == static
+    for causal in (False, True):
+        for window in (0, 3):
+            for iq in range(2):
+                for ik in range(2):
+                    qp = jnp.arange(iq * bq, (iq + 1) * bq)
+                    kp = jnp.arange(ik * bk, (ik + 1) * bk)
+                    zs = jnp.zeros(bq, jnp.int32)
+                    dyn = bool(tile_reachable(qp, kp, zs, zs, causal, window))
+                    st = tile_reachable_static(iq, ik, bq, bk, causal, window)
+                    st = True if st is None else bool(st)
+                    assert dyn == st, (causal, window, iq, ik)
+
+
+def test_cross_stream_segments_need_explicit_ids():
+    """Derived segment ids are per-stream ordinals, so a query block
+    continuing document 2 of a multi-document kv cache MUST pass explicit
+    q_seg/k_seg (the derived q_seg=0 would match the cache's document 0).
+    The explicit path is certified against the oracle; the derived path is
+    shown to differ — the documented reason the contract exists."""
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (1, 3, 2, 16))
+    k = jax.random.normal(ks[1], (1, 16, 2, 16))
+    v = jax.random.normal(ks[2], (1, 16, 2, 16))
+    # cache: doc0 = positions 0..9, doc1 = positions 0..5; q continues doc1
+    k_pos = jnp.asarray(np.concatenate([np.arange(10), np.arange(6)]))[None]
+    k_seg = jnp.asarray([[0] * 10 + [1] * 6])
+    q_pos = jnp.asarray([[6, 7, 8]])
+    q_seg = jnp.asarray([[1, 1, 1]])
+    out = flash_attention(q, k, v, q_pos, k_pos, q_seg, k_seg, causal=True)
+    exp = ref.attention_ref(
+        q, k, v, causal=True, q_pos=q_pos, k_pos=k_pos, q_seg=q_seg, k_seg=k_seg
+    )
+    oracle.assert_trees_close(out, exp, msg="cross-stream explicit segs", atol=2e-3, rtol=2e-3)
+    # doc0's keys at positions 6..8 exist, so attending the WRONG document
+    # would produce a different (nonzero-masked) result: the derived-ordinal
+    # call must differ, which is exactly why explicit ids are required here
+    derived = flash_attention(q, k, v, q_pos, k_pos, causal=True)
+    assert float(jnp.max(jnp.abs(out - derived))) > 1e-3
+
+
+def test_bwd_rejects_implicit_sq_neq_skv():
+    """Sq != Skv with implicit positions is a loud ValueError (the old kernel
+    silently start-aligned the two aranges — 'wrong-shape' semantics under
+    the end-aligned cache convention); explicit positions make the same
+    shapes first-class and must match the oracle."""
+    from repro.kernels import flash_attention_bwd as fab
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 130, 4, 16))
+    k = jax.random.normal(ks[1], (1, 64, 2, 16))
+    v = jax.random.normal(ks[2], (1, 64, 2, 16))
+    with pytest.raises(ValueError, match="Sq == Skv"):
+        flash_attention(q, k, v, causal=True)
+    with pytest.raises(ValueError, match="Sq == Skv"):
+        jax.grad(lambda q_: jnp.sum(flash_attention(q_, k, v, causal=True)))(q)
+    # the residual contract is validated too: a mis-shaped lse fails loudly
+    # instead of reducing garbage into dk/dv
+    with pytest.raises(ValueError, match="lse"):
+        fab.check_bwd_shapes(
+            q, k, v, jnp.zeros((1, 4, 64)), jnp.zeros((1, 4, 130)), q
+        )
+    # explicit positions: the same shapes are well-defined and certified
+    qp = jnp.arange(130, dtype=jnp.int32)[None]
+    kp = jnp.arange(64, dtype=jnp.int32)[None]
+    out = flash_attention(q, k, v, qp, kp, causal=True)
+    exp = ref.attention_ref(q, k, v, causal=True, q_pos=qp, k_pos=kp)
+    oracle.assert_trees_close(out, exp, msg="explicit sq!=skv fwd", atol=2e-3, rtol=2e-3)
+    gk = jax.grad(lambda a: jnp.sum(flash_attention(a, k, v, qp, kp, causal=True)))(q)
+    gr = jax.grad(lambda a: jnp.sum(ref.attention_ref(a, k, v, causal=True, q_pos=qp, k_pos=kp)))(q)
+    oracle.assert_trees_close(gk, gr, msg="explicit sq!=skv dq", atol=2e-3, rtol=2e-3)
 
 
 def test_flash_attention_grad_of_grad_composes():
