@@ -8,12 +8,18 @@ win on the update math.
      (interpret mode on CPU — structural check; wall-clock wins are TPU),
   c) accumulation microbench: the paper scan body's two jnp moment tree
      passes vs the fused Pallas sweep (kernels/flat_stats.py), end to end
-     through grad_stats(use_pallas=True), reporting the fused/unfused delta.
+     through grad_stats under a fused-stats Backend plan, reporting the
+     fused/unfused delta.
   d) flat vs per-leaf dispatch: the single-launch flat-buffer optimizer step
      (kernels/flat_update.py) against PR 1's kernel-per-leaf loop, reporting
      step latency and the structural pallas_call launch counts, emitted
      machine-readable to BENCH_flat_state.json so the perf trajectory is
      tracked across PRs.
+
+Every machine-readable record carries the fully-resolved backend ``plan``
+(Backend.describe(): per-subsystem fused/reference + interpret + platform),
+and merging records with disagreeing plans is refused (benchmarks/common.py)
+— TPU fused numbers can never silently mix with CPU-interpret ones.
 """
 from __future__ import annotations
 
@@ -24,7 +30,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, merge_bench_records
+from repro.backend import Backend
 from repro.configs import get_smoke
 from repro.core import GradStats, gsnr_scale
 from repro.data import lm_batches
@@ -107,8 +114,9 @@ def accumulation(fast: bool) -> None:
 
     times = {}
     for pallas in (False, True):
+        plan = Backend.all_fused() if pallas else Backend.all_reference()
         fn = jax.jit(
-            lambda p, b, up=pallas: grad_stats(loss_fn, p, b, k, use_pallas=up)[2]
+            lambda p, b, bk=plan: grad_stats(loss_fn, p, b, k, backend=bk)[2]
         )
         dt, stats = timed(fn, params, (X, Y), iters=4)
         times[pallas] = dt
@@ -151,7 +159,8 @@ def flat_vs_per_leaf(fast: bool) -> dict:
     cfg = OptimizerConfig(name="vr_lamb", lr=0.01, schedule="constant", weight_decay=0.01)
 
     iters = 2 if fast else 4
-    opt = make_optimizer(cfg, use_pallas=True)
+    plan = Backend.all_fused()
+    opt = make_optimizer(cfg, backend=plan)
     s_flat = opt.init(params)
     flat_fn = jax.jit(lambda s: opt.update(g, s, params, stats=stats))
     n_flat = count_pallas_calls(jax.make_jaxpr(flat_fn)(s_flat))
@@ -177,15 +186,16 @@ def flat_vs_per_leaf(fast: bool) -> dict:
         "flat_vs_per_leaf_ratio", 0.0,
         f"flat/per_leaf={dt_flat/dt_leaf:.3f};launches {n_flat} vs {n_leafcalls} (TPU is the real number)",
     )
-    from repro.kernels.ops import _interpret
-
     return {
         "optimizer": "vr_lamb",
         "n_leaves": n_leaves,
-        # interpret=True means the latency numbers are CPU-interpret (structural
-        # only); TPU reruns write interpret=False, so the perf trajectory can
-        # never silently mix interpreter and hardware measurements.
-        "interpret": _interpret(),
+        # the resolved execution plan: per-subsystem fused/reference plus
+        # interpret + platform.  interpret=True means the latency numbers are
+        # CPU-interpret (structural only); TPU reruns write interpret=False,
+        # so the perf trajectory can never silently mix interpreter and
+        # hardware measurements — run.py refuses mixed-plan records outright.
+        "plan": plan.describe(),
+        "interpret": plan.interpret_mode(),
         "backend": jax.default_backend(),
         "flat": {"launches": n_flat, "us_per_step": dt_flat * 1e6},
         "per_leaf": {"launches": n_leafcalls, "us_per_step": dt_leaf * 1e6},
@@ -206,7 +216,7 @@ def packed_attention(fast: bool) -> dict:
     are the real story.
     """
     from repro.kernels.flash_attention import flash_attention
-    from repro.kernels.ops import _interpret, count_pallas_calls
+    from repro.kernels.ops import count_pallas_calls
 
     b, s, h, kvh, d = (1, 256, 4, 2, 32) if fast else (2, 512, 8, 2, 64)
     key = jax.random.PRNGKey(0)
@@ -244,9 +254,11 @@ def packed_attention(fast: bool) -> dict:
             "fwd_launches": n_fwd, "grad_launches": n_grad,
             "fwd_us": dt_f * 1e6, "grad_us": dt_g * 1e6,
         }
+    plan = Backend.all_fused()
     return {
         "shape": {"B": b, "S": s, "H": h, "KV": kvh, "D": d, "docs": list(lens)},
-        "interpret": _interpret(),
+        "plan": plan.describe(),
+        "interpret": plan.interpret_mode(),
         "backend": jax.default_backend(),
         **rec,
         "note": "packed == explicit pos/seg operands; launch counts must match unpacked",
@@ -258,8 +270,8 @@ def main(fast: bool = False) -> None:
     trainer_overhead(fast)
     update_math(fast)
     accumulation(fast)
-    rec = flat_vs_per_leaf(fast)
-    rec["packed_attention"] = packed_attention(fast)
+    # merge refuses sub-records whose resolved plans disagree (common.py)
+    rec = merge_bench_records(flat_vs_per_leaf(fast), packed_attention=packed_attention(fast))
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_flat_state.json")
     with open(out, "w") as f:
         json.dump(rec, f, indent=1)

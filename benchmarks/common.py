@@ -1,6 +1,8 @@
-"""Shared benchmark helpers: CSV emission, simple training drivers, AUC."""
+"""Shared benchmark helpers: CSV emission, simple training drivers, AUC,
+and the backend-plan consistency guard for machine-readable records."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, Iterable, Optional
 
@@ -21,6 +23,47 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def collect_plans(record, path="") -> Dict[str, dict]:
+    """Every resolved-backend ``plan`` marker in a (nested) BENCH record,
+    keyed by its path.  Walks dicts AND lists so hand-assembled records
+    can't smuggle a mixed-plan sweep past the guard inside an array."""
+    plans: Dict[str, dict] = {}
+    if isinstance(record, dict):
+        if "plan" in record and isinstance(record["plan"], dict):
+            plans[path or "<root>"] = record["plan"]
+        for key, val in record.items():
+            if key != "plan":
+                plans.update(collect_plans(val, f"{path}/{key}" if path else key))
+    elif isinstance(record, list):
+        for i, val in enumerate(record):
+            plans.update(collect_plans(val, f"{path}[{i}]"))
+    return plans
+
+
+def check_plans_agree(record, what: str = "BENCH record") -> Dict[str, dict]:
+    """Refuse mixed-plan records: every sub-record's resolved backend plan
+    (Backend.describe()) must be identical, so interpreter/CPU numbers can
+    never silently merge with TPU fused-path numbers — or a fused sweep with
+    a reference one.  Returns the collected plans."""
+    plans = collect_plans(record)
+    distinct = {json.dumps(p, sort_keys=True) for p in plans.values()}
+    if len(distinct) > 1:
+        detail = "\n".join(f"  {k}: {json.dumps(v, sort_keys=True)}" for k, v in sorted(plans.items()))
+        raise ValueError(
+            f"{what}: refusing to merge records with disagreeing backend plans:\n{detail}"
+        )
+    return plans
+
+
+def merge_bench_records(base: dict, **sub_records: dict) -> dict:
+    """Merge benchmark sub-records into one BENCH dict, refusing when their
+    ``plan`` fields disagree (see check_plans_agree)."""
+    merged = dict(base)
+    merged.update(sub_records)
+    check_plans_agree(merged, what="merge_bench_records")
+    return merged
 
 
 def auc(labels: np.ndarray, scores: np.ndarray) -> float:

@@ -16,6 +16,8 @@
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -29,6 +31,27 @@ MODULES = [
     "overhead",
     "roofline",
 ]
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_flat_state.json")
+
+
+def validate_bench_plans() -> bool:
+    """Post-run gate: every ``plan`` marker inside BENCH_flat_state.json must
+    agree (one resolved Backend per record file) — a record mixing, say, a
+    TPU fused rerun with leftover CPU-interpret sub-records is refused here
+    even if it was hand-assembled rather than merged through common.py."""
+    if not os.path.exists(BENCH_JSON):
+        return True
+    from benchmarks.common import check_plans_agree
+
+    with open(BENCH_JSON) as f:
+        rec = json.load(f)
+    try:
+        check_plans_agree(rec, what=os.path.basename(BENCH_JSON))
+    except ValueError as e:
+        print(f"# {e}", file=sys.stderr)
+        return False
+    return True
 
 
 def main() -> None:
@@ -50,6 +73,8 @@ def main() -> None:
             failures.append(mod)
             print(f"# bench_{mod} FAILED:", file=sys.stderr)
             traceback.print_exc()
+    if not validate_bench_plans():
+        failures.append("bench_plan_consistency")
     print(f"# total {time.time()-t0:.1f}s; failures: {failures or 'none'}")
     if failures:
         sys.exit(1)

@@ -23,6 +23,8 @@ import dataclasses
 import math
 from typing import Optional, Tuple
 
+from repro.backend import Backend
+
 # ---------------------------------------------------------------------------
 # Model
 # ---------------------------------------------------------------------------
@@ -193,7 +195,14 @@ class ParallelismConfig:
     remat: bool = True
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
-    use_pallas: bool = False  # TPU backends / interpret tests only
+    # Execution plan: per-subsystem fused/reference/auto selection plus the
+    # interpret-mode override (repro.backend.Backend).  Consumers resolve it
+    # ONCE via repro.backend.resolve_backend(cfg.parallel) and pass it down.
+    backend: Backend = Backend()
+    # DEPRECATED (one release): the legacy all-or-nothing boolean.  None =
+    # unset; a set value takes precedence over `backend` and maps through
+    # Backend.from_flag in resolve_backend (which warns once per process).
+    use_pallas: Optional[bool] = None
     attn_chunk: int = 1024  # q-chunk for online-softmax attention (0 = naive)
     scan_layers: bool = True
 
@@ -206,6 +215,11 @@ class Config:
     seed: int = 0
     global_batch: int = 32
     seq_len: int = 512
+    # Cross-entropy normalization for packed batches: "token" = mean over
+    # live tokens (default); "document" = every packed document contributes
+    # its own token-mean NLL with equal weight (BERT-pretraining style) —
+    # long documents can't drown short ones.  Ignored for unpacked batches.
+    loss_norm: str = "token"
 
     def replace(self, **kw) -> "Config":
         return dataclasses.replace(self, **kw)

@@ -51,18 +51,29 @@ def device_grad_stats_fn(
     fused: bool = True,
     has_aux: bool = False,
     flat: bool = False,
+    backend=None,
 ) -> Callable:
     """Returns f(params, batch) -> (loss, aux, GradStats) with device-wise k.
 
     params replicated, batch sharded over ``data_axis``.
 
-    flat=True (the use_pallas / flat-state path): the local gradient packs
-    into the ParamLayout flat buffer first, so the fused collective is one
-    pmean over a single contiguous (2*rows, LANE) array — no per-leaf
-    stacked [g, g²] tree copy — and the returned GradStats carries
-    FlatBuffers ready for the single-launch optimizer kernels.  fused=False
-    still reproduces the paper's two-collective schedule, over flat carries.
+    flat=True (the flat-state path; implied by a Backend plan whose stats
+    subsystem is fused): the local gradient packs into the ParamLayout flat
+    buffer first, so the fused collective is one pmean over a single
+    contiguous (2*rows, LANE) array — no per-leaf stacked [g, g²] tree copy
+    — and the returned GradStats carries FlatBuffers ready for the
+    single-launch optimizer kernels.  fused=False still reproduces the
+    paper's two-collective schedule, over flat carries.
     """
+    if backend is not None:
+        if flat:
+            raise ValueError(
+                "device_grad_stats_fn: pass either backend= (flat follows the "
+                "plan's stats subsystem) or flat=True, not both"
+            )
+        from repro.backend import resolve_backend
+
+        flat = resolve_backend(backend, where="device_grad_stats_fn").fused("stats")
     k = dict(mesh.shape)[data_axis]
     gfn = jax.value_and_grad(loss_fn, has_aux=has_aux)
 

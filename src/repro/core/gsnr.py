@@ -30,9 +30,10 @@ class GradStats(NamedTuple):
     sq_mean: E_d[g_d ⊗ g_d]  — mean of element-wise squared group gradients
     k:       number of groups (devices / microbatches)
 
-    On the flat-state path (use_pallas) mean/sq_mean are FlatBuffer nodes
-    (core/layout.py) — already contiguous for the single-launch optimizer
-    kernels.  ``as_tree()`` unpacks for the per-layer jnp pipeline below.
+    On the flat-state path (a Backend plan with fused stats) mean/sq_mean
+    are FlatBuffer nodes (core/layout.py) — already contiguous for the
+    single-launch optimizer kernels.  ``as_tree()`` unpacks for the
+    per-layer jnp pipeline below.
     """
 
     mean: PyTree

@@ -19,12 +19,16 @@ update — otherwise m/v would be biased for the next step (paper's remark in
 ``gamma=1.0`` collapses r to exactly 1 (clip floor == ceiling), so every VR
 optimizer reduces to its base optimizer — a property test locks this in.
 
-When ``use_pallas`` is set, the optimizer state (m/v/p) lives as ParamLayout
-flat buffers (core/layout.py) and every fresh-stats update is ONE fused
+Dispatch is a :class:`repro.backend.Backend` execution plan (the old
+boolean is a one-release deprecation shim mapped in repro.backend).  With a
+fused ``optimizer`` subsystem the state (m/v/p) lives as ParamLayout flat
+buffers (core/layout.py) and every fresh-stats update is ONE fused
 ``pallas_call`` over the whole parameter set (kernels/flat_update.py via
 kernels/ops.py) — per-leaf mean(r) and trust-ratio reductions run as grid
 phases inside the kernel, so there is no jnp prepass and no per-leaf
-dispatch loop.  Amortized-GSNR "stale" steps (no Σg² tree) run the same
+dispatch loop.  An optional ``spmd`` plan (``Backend.shard(mesh, rules)``)
+reroutes those calls through per-shard shard_map pipelines on FSDP-sharded
+buffer rows.  Amortized-GSNR "stale" steps (no Σg² tree) run the same
 element-wise jnp math below directly on the flat buffers: because
 FlatBuffer is a pytree node, ``_vr_adam_dir`` works unchanged, fully
 XLA-fused over a single array.  The jnp path here is the oracle either way.
@@ -36,6 +40,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.backend import Backend, resolve_backend
 from repro.core import baselines as B
 from repro.core.gsnr import GradStats, gsnr_scale
 from repro.core.layout import FlatBuffer, ParamLayout, as_flat, is_flat
@@ -51,10 +56,12 @@ def _flat_zeros_fn(params, state_dtype: str = "float32"):
     return lambda: FlatBuffer(layout.zeros(sd), layout)
 
 
-def _unpacked(upd):
-    """Updates cross back into pytree land at the transform boundary (the
-    trainer adds them to the tree-valued params)."""
-    return upd.unpack() if is_flat(upd) else upd
+def _unpacked(x):
+    """Normalize a possibly-flat value to a pytree: updates cross back into
+    tree land at the transform boundary (the trainer adds them to the
+    tree-valued params), and the reference paths accept FlatBuffer grads
+    from a fused-stats plan by unpacking them on entry."""
+    return x.unpack() if is_flat(x) else x
 
 
 def _require(stats: Optional[GradStats]) -> GradStats:
@@ -63,23 +70,28 @@ def _require(stats: Optional[GradStats]) -> GradStats:
     return stats
 
 
-def _scaled_grads(grads, stats, gamma, eps, use_pallas=False):
+def _scaled_grads(grads, stats, gamma, eps, fused=False, backend=None, spmd=None):
     stats = _require(stats)
-    if use_pallas:
+    if fused:
         from repro.kernels import ops as kops
 
-        return kops.vr_scale_tree(stats, grads, gamma, eps)
+        return kops.vr_scale_tree(stats, grads, gamma, eps, backend=backend, spmd=spmd)
+    grads = _unpacked(grads)
     r = gsnr_scale(stats, gamma, eps)
     return _tm(lambda r_, g: r_ * g, r, grads), r
 
 
-def vr_sgd(lr_fn: Callable, gamma: float = 0.1, eps: float = 1e-12, use_pallas: bool = False) -> B.Transform:
+def vr_sgd(lr_fn: Callable, gamma: float = 0.1, eps: float = 1e-12,
+           backend: Optional[Backend] = None, *, spmd=None, use_pallas=None) -> B.Transform:
+    bk = resolve_backend(backend, use_pallas=use_pallas, where="vrgd.vr_sgd")
+    fused = bk.fused("optimizer")
+
     def init(params):
         return {"step": jnp.zeros((), jnp.int32)}
 
     def update(grads, state, params=None, stats=None):
         lr = lr_fn(state["step"])
-        sg, _r = _scaled_grads(grads, stats, gamma, eps, use_pallas)
+        sg, _r = _scaled_grads(grads, stats, gamma, eps, fused, bk, spmd)
         upd = _tm(lambda g: -lr * g, sg)
         return _unpacked(upd), {"step": state["step"] + 1}
 
@@ -87,15 +99,19 @@ def vr_sgd(lr_fn: Callable, gamma: float = 0.1, eps: float = 1e-12, use_pallas: 
 
 
 def vr_momentum(
-    lr_fn: Callable, mu: float = 0.9, gamma: float = 0.1, eps: float = 1e-12, use_pallas: bool = False
+    lr_fn: Callable, mu: float = 0.9, gamma: float = 0.1, eps: float = 1e-12,
+    backend: Optional[Backend] = None, *, spmd=None, use_pallas=None,
 ) -> B.Transform:
+    bk = resolve_backend(backend, use_pallas=use_pallas, where="vrgd.vr_momentum")
+    fused = bk.fused("optimizer")
+
     def init(params):
-        z = _flat_zeros_fn(params)() if use_pallas else _tm(jnp.zeros_like, params)
+        z = _flat_zeros_fn(params)() if fused else _tm(jnp.zeros_like, params)
         return {"step": jnp.zeros((), jnp.int32), "m": z}
 
     def update(grads, state, params=None, stats=None):
         lr = lr_fn(state["step"])
-        sg, _r = _scaled_grads(grads, stats, gamma, eps, use_pallas)
+        sg, _r = _scaled_grads(grads, stats, gamma, eps, fused, bk, spmd)
         m = _tm(lambda m_, g: mu * m_ + g, state["m"], sg)
         upd = _tm(lambda m_: -lr * m_, m)
         return _unpacked(upd), {"step": state["step"] + 1, "m": m}
@@ -148,12 +164,18 @@ def vr_adam(
     wd: float = 0.0,
     gamma: float = 0.1,
     gsnr_eps: float = 1e-12,
-    use_pallas: bool = False,
+    backend: Optional[Backend] = None,
     state_dtype: str = "float32",
+    *,
+    spmd=None,
+    use_pallas=None,
 ) -> B.Transform:
+    bk = resolve_backend(backend, use_pallas=use_pallas, where="vrgd.vr_adam")
+    fused = bk.fused("optimizer")
+
     def init(params):
         sd = jnp.dtype(state_dtype)
-        if use_pallas:
+        if fused:
             z = _flat_zeros_fn(params, state_dtype)
         else:
             z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
@@ -162,19 +184,21 @@ def vr_adam(
 
     def update(grads, state, params=None, stats=None):
         lr = lr_fn(state["step"])
-        if use_pallas and stats is not None:
+        if fused and stats is not None:
             from repro.kernels import ops as kops
 
             return kops.vr_adam_update(
                 grads, state, _require(stats), lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
-                params, state_dtype,
+                params, state_dtype, backend=bk, spmd=spmd,
             )
-        if use_pallas:
+        if fused:
             # stale-GSNR step on flat state: the element-wise math below runs
             # directly on the flat buffers (one fused XLA sweep, no launches)
             layout = state["m"].layout
             grads = as_flat(grads, layout)
             params = as_flat(params, layout) if params is not None else None
+        else:
+            grads = _unpacked(grads)
         d, new_state = _vr_adam_dir(
             grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
         )
@@ -193,22 +217,27 @@ def vr_lars(
     trust: float = 0.001,
     gamma: float = 0.1,
     eps: float = 1e-12,
-    use_pallas: bool = False,
+    backend: Optional[Backend] = None,
+    *,
+    spmd=None,
+    use_pallas=None,
 ) -> B.Transform:
+    bk = resolve_backend(backend, use_pallas=use_pallas, where="vrgd.vr_lars")
+    fused = bk.fused("optimizer")
     base = B.lars(lr_fn, mu=mu, wd=wd, trust=trust)
 
     def init(params):
-        if use_pallas:
+        if fused:
             return {"step": jnp.zeros((), jnp.int32), "m": _flat_zeros_fn(params)()}
         return base.init(params)
 
     def update(grads, state, params, stats=None):
-        if use_pallas:
+        if fused:
             from repro.kernels import ops as kops
 
             return kops.vr_lars_update(
                 grads, state, _require(stats), lr_fn(state["step"]), mu, wd, trust,
-                gamma, eps, params,
+                gamma, eps, params, backend=bk, spmd=spmd,
             )
         sg, _r = _scaled_grads(grads, stats, gamma, eps, False)
         return base.update(sg, state, params)
@@ -225,12 +254,18 @@ def vr_lamb(
     wd: float = 0.01,
     gamma: float = 0.1,
     gsnr_eps: float = 1e-12,
-    use_pallas: bool = False,
+    backend: Optional[Backend] = None,
     state_dtype: str = "float32",
+    *,
+    spmd=None,
+    use_pallas=None,
 ) -> B.Transform:
+    bk = resolve_backend(backend, use_pallas=use_pallas, where="vrgd.vr_lamb")
+    fused = bk.fused("optimizer")
+
     def init(params):
         sd = jnp.dtype(state_dtype)
-        if use_pallas:
+        if fused:
             z = _flat_zeros_fn(params, state_dtype)
         else:
             z = lambda: _tm(lambda x: jnp.zeros(x.shape, sd), params)
@@ -239,14 +274,14 @@ def vr_lamb(
 
     def update(grads, state, params, stats=None):
         lr = lr_fn(state["step"])
-        if use_pallas and stats is not None:
+        if fused and stats is not None:
             from repro.kernels import ops as kops
 
             return kops.vr_lamb_update(
                 grads, state, _require(stats), lr, b1, b2, b3, eps, wd, gamma,
-                gsnr_eps, params, state_dtype,
+                gsnr_eps, params, state_dtype, backend=bk, spmd=spmd,
             )
-        if use_pallas:
+        if fused:
             # stale-GSNR step on flat state: element-wise chain via the shared
             # jnp math, then the per-leaf trust ratio as a segment reduction
             # over the flat rows (kernels/ops.py) — no per-leaf dispatch.
@@ -259,7 +294,7 @@ def vr_lamb(
             )
             return kops.lamb_trust_flat(d, params, lr, wd), new_state
         d, new_state = _vr_adam_dir(
-            grads, state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
+            _unpacked(grads), state, stats, b1, b2, b3, eps, gamma, gsnr_eps, state_dtype
         )
 
         def one(d_, p_):
@@ -279,10 +314,18 @@ def vr_lamb(
 # ---------------------------------------------------------------------------
 
 
-def make_optimizer(cfg, use_pallas: bool = False) -> B.Transform:
-    """OptimizerConfig -> Transform (base or VR per cfg.name)."""
+def make_optimizer(cfg, backend: Optional[Backend] = None, *, spmd=None,
+                   use_pallas=None) -> B.Transform:
+    """OptimizerConfig -> Transform (base or VR per cfg.name).
+
+    backend: the execution plan (repro.backend.Backend; also accepts a
+    ParallelismConfig / Config, or a legacy bool — deprecated, warns once).
+    spmd: optional Backend.shard(...) plan; the fused flat-buffer calls then
+    run per-shard under shard_map on FSDP-sharded buffer rows.
+    """
     from repro.core.schedule import make_schedule
 
+    bk = resolve_backend(backend, use_pallas=use_pallas, where="make_optimizer")
     lr_fn = make_schedule(cfg)
     g, ge = cfg.gamma, cfg.gsnr_eps
     table = {
@@ -291,18 +334,19 @@ def make_optimizer(cfg, use_pallas: bool = False) -> B.Transform:
         "adam": lambda: B.adam(lr_fn, cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay),
         "lars": lambda: B.lars(lr_fn, cfg.momentum, cfg.weight_decay),
         "lamb": lambda: B.lamb(lr_fn, cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay),
-        "vr_sgd": lambda: vr_sgd(lr_fn, g, ge, use_pallas),
-        "vr_momentum": lambda: vr_momentum(lr_fn, cfg.momentum, g, ge, use_pallas),
+        "vr_sgd": lambda: vr_sgd(lr_fn, g, ge, bk, spmd=spmd),
+        "vr_momentum": lambda: vr_momentum(lr_fn, cfg.momentum, g, ge, bk, spmd=spmd),
         "vr_adam": lambda: vr_adam(
-            lr_fn, cfg.b1, cfg.b2, cfg.b3, cfg.eps, cfg.weight_decay, g, ge, use_pallas,
-            cfg.state_dtype,
+            lr_fn, cfg.b1, cfg.b2, cfg.b3, cfg.eps, cfg.weight_decay, g, ge, bk,
+            cfg.state_dtype, spmd=spmd,
         ),
         "vr_lars": lambda: vr_lars(
-            lr_fn, cfg.momentum, cfg.weight_decay, gamma=g, eps=ge, use_pallas=use_pallas
+            lr_fn, cfg.momentum, cfg.weight_decay, gamma=g, eps=ge, backend=bk,
+            spmd=spmd,
         ),
         "vr_lamb": lambda: vr_lamb(
-            lr_fn, cfg.b1, cfg.b2, cfg.b3, cfg.eps, cfg.weight_decay, g, ge, use_pallas,
-            cfg.state_dtype,
+            lr_fn, cfg.b1, cfg.b2, cfg.b3, cfg.eps, cfg.weight_decay, g, ge, bk,
+            cfg.state_dtype, spmd=spmd,
         ),
     }
     if cfg.name not in table:

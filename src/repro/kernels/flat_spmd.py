@@ -1,0 +1,275 @@
+"""Per-shard building blocks for the flat-buffer kernels under shard_map.
+
+The single-launch kernels in kernels/flat_update.py fold the per-leaf
+("layer") scalar reductions — the GSNR normalizer 1/mean(r) and the
+LAMB/LARS trust-ratio norms — into grid phases over a persistent VMEM
+scratch accumulator.  That is correct only when one kernel instance sees ALL
+of a leaf's rows; under FSDP the flat buffer's rows dimension is sharded
+(Rules.flat_buffer_pspec), so each device holds a contiguous row slice and
+the reduction must split:
+
+  1. a per-shard PARTIALS kernel (``leaf_r_partials``) accumulating the raw
+     GSNR sums into a (leaf_slots, LANE) OUTPUT block (revisited across the
+     local grid, the flat_stats vmap pattern);
+  2. one ``jax.lax.psum`` of that small accumulator across the shards — the
+     only collective in the update (orchestrated by backend.FlatSpmd);
+  3. a per-shard APPLY / COMPUTE kernel taking the combined accumulator as
+     an ordinary operand where the fused kernel read its scratch.
+
+The element-wise math is IMPORTED from flat_update (``_raw_r``,
+``_inv_mean_r``, ``_adam_math``), so per-shard and single-launch paths
+cannot drift.  Numerics: a shard accumulates its blocks in the same order
+the fused kernel's phase-0 sweep does, and shards that hold none of a
+leaf's rows contribute exact zero partials — so whenever no leaf straddles
+a shard boundary the combined scalars (and therefore the whole update) are
+BIT-IDENTICAL to the single-launch kernel; a straddling leaf reassociates
+one addition per boundary (~1 ulp on the leaf scalar).
+
+Grids derive from the LOCAL operand shapes (``g.shape[0] // block_rows``) —
+the same wrappers serve any shard count, including 1 (the differential
+tests run them unsharded against the fused kernels).  The (n_blocks, 1)
+leaf-id map rides as a SHARDED operand: its row split under the same
+PartitionSpec is exactly the buffer's block split, so each shard reads its
+own leaf ids with no index arithmetic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.layout import LANE, ParamLayout
+from repro.kernels.flat_stats import _local_blocks
+from repro.kernels.flat_update import _adam_math, _inv_mean_r, _raw_r
+
+_f32 = jnp.float32
+
+
+def _specs(layout: ParamLayout):
+    """(row-block, leaf-id, accumulator, inv-size, scalar) BlockSpecs for a
+    1-D local grid over row blocks."""
+    blk = pl.BlockSpec((layout.block_rows, LANE), lambda b: (b, 0))
+    lid = pl.BlockSpec((1, 1), lambda b: (b, 0))
+    acc = pl.BlockSpec((layout.leaf_slots, LANE), lambda b: (0, 0))
+    inv = pl.BlockSpec((layout.leaf_slots, 1), lambda b: (0, 0))
+    scal = pl.BlockSpec((1, 8), lambda b: (0, 0))
+    return blk, lid, acc, inv, scal
+
+
+def trust_from_partials(uacc, wacc, *, numer_is_phi: bool, trust: float):
+    """Per-leaf LAMB/LARS trust ratio from the psum-combined norm partials.
+
+    Mirrors flat_update._trust_ratio term for term (jnp.sum over the LANE
+    row, sqrt, phi clamp) so the sharded epilogue matches the in-kernel
+    phase-2 math exactly."""
+    un = jnp.sqrt(jnp.sum(uacc, axis=1))
+    pn = jnp.sqrt(jnp.sum(wacc, axis=1))
+    numer = jnp.clip(pn, 0.0, 10.0) if numer_is_phi else trust * pn
+    return jnp.where((pn > 0) & (un > 0), numer / (un + 1e-12), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# partials: the fused kernels' phase 0, emitting the accumulator as output
+# ---------------------------------------------------------------------------
+
+
+def _r_partials_kernel(lid_ref, g_ref, g2_ref, racc_ref, *, gsnr_eps):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        racc_ref[...] = jnp.zeros_like(racc_ref)
+
+    leaf = lid_ref[0, 0]
+    racc_ref[pl.ds(leaf, 1), :] += jnp.sum(
+        _raw_r(g_ref, g2_ref, gsnr_eps), axis=0, keepdims=True
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "gsnr_eps", "interpret"))
+def leaf_r_partials(g, g2, lids, layout: ParamLayout, *, gsnr_eps, interpret: bool = True):
+    """Shard-local per-leaf Σ r_raw partials: one launch over the local rows."""
+    blk, lid, acc, _, _ = _specs(layout)
+    return pl.pallas_call(
+        functools.partial(_r_partials_kernel, gsnr_eps=gsnr_eps),
+        grid=(_local_blocks(g, layout),),
+        in_specs=[lid, blk, blk],
+        out_specs=acc,
+        out_shape=jax.ShapeDtypeStruct((layout.leaf_slots, LANE), _f32),
+        interpret=interpret,
+    )(lids, g, g2)
+
+
+# ---------------------------------------------------------------------------
+# apply kernels: the fused kernels' later phases, accumulator as an operand
+# ---------------------------------------------------------------------------
+
+
+def _scale_apply_kernel(lid_ref, invsz_ref, racc_ref, g_ref, ga_ref, g2_ref,
+                        sg_ref, r_ref, *, gamma, eps):
+    leaf = lid_ref[0, 0]
+    r_raw = _raw_r(g_ref, g2_ref, eps)
+    r = jnp.clip(r_raw * _inv_mean_r(racc_ref, invsz_ref, leaf), gamma, 1.0)
+    sg_ref[...] = r * ga_ref[...].astype(_f32)
+    r_ref[...] = r
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "gamma", "eps", "interpret"))
+def vr_scale_apply(g, ga, g2, racc, lids, invsz, layout: ParamLayout, *,
+                   gamma, eps, interpret: bool = True):
+    """Shard-local (scaled_grad, r) given the combined r accumulator."""
+    blk, lid, acc, inv, _ = _specs(layout)
+    sds = jax.ShapeDtypeStruct(g.shape, _f32)
+    return pl.pallas_call(
+        functools.partial(_scale_apply_kernel, gamma=gamma, eps=eps),
+        grid=(_local_blocks(g, layout),),
+        in_specs=[lid, inv, acc, blk, blk, blk],
+        out_specs=(blk, blk),
+        out_shape=(sds, sds),
+        interpret=interpret,
+    )(lids, invsz, racc, g, ga, g2)
+
+
+def _adam_apply_kernel(lid_ref, invsz_ref, racc_ref, g_ref, ga_ref, g2_ref,
+                       m_ref, v_ref, p_ref, w_ref, scal_ref,
+                       upd_ref, m_out, v_out, p_out,
+                       *, b1, b2, b3, eps, wd, gamma, gsnr_eps):
+    leaf = lid_ref[0, 0]
+    lr = scal_ref[0, 0]
+    direction, m_new, v_new, p_new = _adam_math(
+        _raw_r(g_ref, g2_ref, gsnr_eps),
+        _inv_mean_r(racc_ref, invsz_ref, leaf),
+        ga_ref, m_ref, v_ref, p_ref, scal_ref,
+        b1=b1, b2=b2, b3=b3, gamma=gamma, eps=eps,
+    )
+    upd_ref[...] = -lr * (direction + wd * w_ref[...].astype(_f32))
+    m_out[...] = m_new.astype(m_out.dtype)
+    v_out[...] = v_new.astype(v_out.dtype)
+    p_out[...] = p_new.astype(p_out.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "layout", "b1", "b2", "b3", "eps", "wd", "gamma", "gsnr_eps", "state_dtype", "interpret",
+    ),
+)
+def vr_adam_apply(g, ga, g2, m, v, p, w, scal, racc, lids, invsz,
+                  layout: ParamLayout, *, b1, b2, b3, eps, wd, gamma, gsnr_eps,
+                  state_dtype="float32", interpret: bool = True):
+    """Shard-local full VR-Adam apply given the combined r accumulator."""
+    blk, lid, acc, inv, scal_spec = _specs(layout)
+    sd = jnp.dtype(state_dtype)
+    f32_sds = jax.ShapeDtypeStruct(g.shape, _f32)
+    sd_sds = jax.ShapeDtypeStruct(g.shape, sd)
+    return pl.pallas_call(
+        functools.partial(
+            _adam_apply_kernel,
+            b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
+        ),
+        grid=(_local_blocks(g, layout),),
+        in_specs=[lid, inv, acc] + [blk] * 7 + [scal_spec],
+        out_specs=(blk,) * 4,
+        out_shape=(f32_sds, sd_sds, sd_sds, sd_sds),
+        interpret=interpret,
+    )(lids, invsz, racc, g, ga, g2, m, v, p, w, scal)
+
+
+def _lamb_compute_kernel(lid_ref, invsz_ref, racc_ref, g_ref, ga_ref, g2_ref,
+                         m_ref, v_ref, p_ref, w_ref, scal_ref,
+                         u_ref, m_out, v_out, p_out, uacc_ref, wacc_ref,
+                         *, b1, b2, b3, eps, wd, gamma, gsnr_eps):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        uacc_ref[...] = jnp.zeros_like(uacc_ref)
+        wacc_ref[...] = jnp.zeros_like(wacc_ref)
+
+    leaf = lid_ref[0, 0]
+    w = w_ref[...].astype(_f32)
+    direction, m_new, v_new, p_new = _adam_math(
+        _raw_r(g_ref, g2_ref, gsnr_eps),
+        _inv_mean_r(racc_ref, invsz_ref, leaf),
+        ga_ref, m_ref, v_ref, p_ref, scal_ref,
+        b1=b1, b2=b2, b3=b3, gamma=gamma, eps=eps,
+    )
+    u = direction + wd * w  # padded tail: g = ga = w = 0 -> u = 0 (exact norms)
+    u_ref[...] = u
+    m_out[...] = m_new.astype(m_out.dtype)
+    v_out[...] = v_new.astype(v_out.dtype)
+    p_out[...] = p_new.astype(p_out.dtype)
+    uacc_ref[pl.ds(leaf, 1), :] += jnp.sum(u * u, axis=0, keepdims=True)
+    wacc_ref[pl.ds(leaf, 1), :] += jnp.sum(w * w, axis=0, keepdims=True)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "layout", "b1", "b2", "b3", "eps", "wd", "gamma", "gsnr_eps", "state_dtype", "interpret",
+    ),
+)
+def vr_lamb_compute(g, ga, g2, m, v, p, w, scal, racc, lids, invsz,
+                    layout: ParamLayout, *, b1, b2, b3, eps, wd, gamma, gsnr_eps,
+                    state_dtype="float32", interpret: bool = True):
+    """Shard-local VR-LAMB compute: (u, m', v', p', uacc, wacc) — the
+    pre-trust-ratio update plus the shard's norm partials; the cross-shard
+    psum and the -lr * ratio * u epilogue live in backend.FlatSpmd."""
+    blk, lid, acc, inv, scal_spec = _specs(layout)
+    sd = jnp.dtype(state_dtype)
+    f32_sds = jax.ShapeDtypeStruct(g.shape, _f32)
+    sd_sds = jax.ShapeDtypeStruct(g.shape, sd)
+    acc_sds = jax.ShapeDtypeStruct((layout.leaf_slots, LANE), _f32)
+    return pl.pallas_call(
+        functools.partial(
+            _lamb_compute_kernel,
+            b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
+        ),
+        grid=(_local_blocks(g, layout),),
+        in_specs=[lid, inv, acc] + [blk] * 7 + [scal_spec],
+        out_specs=(blk, blk, blk, blk, acc, acc),
+        out_shape=(f32_sds, sd_sds, sd_sds, sd_sds, acc_sds, acc_sds),
+        interpret=interpret,
+    )(lids, invsz, racc, g, ga, g2, m, v, p, w, scal)
+
+
+def _lars_compute_kernel(lid_ref, invsz_ref, racc_ref, g_ref, ga_ref, g2_ref,
+                         w_ref, scal_ref, u_ref, uacc_ref, wacc_ref, *, wd, eps):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        uacc_ref[...] = jnp.zeros_like(uacc_ref)
+        wacc_ref[...] = jnp.zeros_like(wacc_ref)
+
+    leaf = lid_ref[0, 0]
+    gamma = scal_ref[0, 1]
+    w = w_ref[...].astype(_f32)
+    r = jnp.clip(
+        _raw_r(g_ref, g2_ref, eps) * _inv_mean_r(racc_ref, invsz_ref, leaf),
+        gamma, 1.0,
+    )
+    u = r * ga_ref[...].astype(_f32) + wd * w
+    u_ref[...] = u
+    uacc_ref[pl.ds(leaf, 1), :] += jnp.sum(u * u, axis=0, keepdims=True)
+    wacc_ref[pl.ds(leaf, 1), :] += jnp.sum(w * w, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "wd", "eps", "interpret"))
+def vr_lars_compute(g, ga, g2, w, scal, racc, lids, invsz, layout: ParamLayout,
+                    *, wd, eps, interpret: bool = True):
+    """Shard-local VR-LARS compute: (u, uacc, wacc); the momentum fold and
+    trust-ratio epilogue live in backend.FlatSpmd."""
+    blk, lid, acc, inv, scal_spec = _specs(layout)
+    sds = jax.ShapeDtypeStruct(g.shape, _f32)
+    acc_sds = jax.ShapeDtypeStruct((layout.leaf_slots, LANE), _f32)
+    return pl.pallas_call(
+        functools.partial(_lars_compute_kernel, wd=wd, eps=eps),
+        grid=(_local_blocks(g, layout),),
+        in_specs=[lid, inv, acc] + [blk] * 4 + [scal_spec],
+        out_specs=(blk, acc, acc),
+        out_shape=(sds, acc_sds, acc_sds),
+        interpret=interpret,
+    )(lids, invsz, racc, g, ga, g2, w, scal)

@@ -16,9 +16,22 @@ for accum/finalize are shared with the per-leaf path (grad_stats.py), which
 stays as the differential oracle reference.
 
 ``flat_vmap_moments`` covers the vmap stats method (ROADMAP item: it used to
-ignore use_pallas): the (k, param) gradient stack reduces to (mean, sq_mean)
-in one kernel, grid (n_blocks, k) with k minor so the output block revisits
-are consecutive (the standard accumulate-in-VMEM pattern).
+ignore the fused-stats backend): the (k, param) gradient stack reduces to
+(mean, sq_mean) in one kernel, grid (n_blocks, k) with k minor so the output
+block revisits are consecutive (the standard accumulate-in-VMEM pattern).
+
+``flat_g_accum`` is the g-only variant for the amortized-GSNR "stale" scan
+path (squares=False): no Σg² stream, the mean-gradient carry stays a flat
+buffer for the whole scan instead of a jnp tree.
+
+The scan-path sweeps (``flat_moments_accum`` / ``flat_g_accum`` /
+``flat_moments_finalize``) derive their grids from the LOCAL operand shape
+(``gs.shape[0] // block_rows``), not ``layout.n_blocks`` — they are purely
+element-wise, so those very wrappers run per-shard under shard_map
+(backend.FlatSpmd) on FSDP row slices of the buffer, with no other change.
+``flat_vmap_moments`` is the exception: its grid still comes from the full
+``layout`` geometry and it has no per-shard wrapper (the vmap stats path
+keeps the gathered one-launch reduction).
 """
 from __future__ import annotations
 
@@ -36,19 +49,49 @@ def _blk(layout: ParamLayout):
     return pl.BlockSpec((layout.block_rows, LANE), lambda i: (i, 0))
 
 
+def _local_blocks(x, layout: ParamLayout) -> int:
+    rows = x.shape[0]
+    if rows % layout.block_rows:
+        raise ValueError(
+            f"flat carry has {rows} rows, not a multiple of block_rows="
+            f"{layout.block_rows} — shard count must divide n_blocks"
+        )
+    return rows // layout.block_rows
+
+
 @functools.partial(jax.jit, static_argnames=("layout", "interpret"))
 def flat_moments_accum(gs, g2s, g, layout: ParamLayout, interpret: bool = True):
     """One scan-body update of both flat moment carries: a single launch."""
     blk = _blk(layout)
-    sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), jnp.float32)
+    sds = jax.ShapeDtypeStruct(gs.shape, jnp.float32)
     return pl.pallas_call(
         _accum_kernel,
-        grid=(layout.n_blocks,),
+        grid=(_local_blocks(gs, layout),),
         in_specs=[blk, blk, blk],
         out_specs=(blk, blk),
         out_shape=(sds, sds),
         interpret=interpret,
     )(gs, g2s, g)
+
+
+def _g_accum_kernel(gs_ref, g_ref, gs_out):
+    gs_out[...] = gs_ref[...] + g_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
+def flat_g_accum(gs, g, layout: ParamLayout, interpret: bool = True):
+    """One scan-body update of the g-only flat carry (stale-GSNR steps):
+    a single launch, no Σg² stream."""
+    blk = _blk(layout)
+    sds = jax.ShapeDtypeStruct(gs.shape, jnp.float32)
+    return pl.pallas_call(
+        _g_accum_kernel,
+        grid=(_local_blocks(gs, layout),),
+        in_specs=[blk, blk],
+        out_specs=blk,
+        out_shape=sds,
+        interpret=interpret,
+    )(gs, g)
 
 
 @functools.partial(jax.jit, static_argnames=("layout", "interpret"))
@@ -59,10 +102,10 @@ def flat_moments_finalize(gs, g2s, k, layout: ParamLayout, interpret: bool = Tru
     """
     inv = (1.0 / jnp.asarray(k, jnp.float32)).reshape(1, 1)
     blk = _blk(layout)
-    sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), jnp.float32)
+    sds = jax.ShapeDtypeStruct(gs.shape, jnp.float32)
     return pl.pallas_call(
         _finalize_kernel,
-        grid=(layout.n_blocks,),
+        grid=(_local_blocks(gs, layout),),
         in_specs=[blk, blk, pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=(blk, blk),
         out_shape=(sds, sds),

@@ -1,6 +1,11 @@
 """Jit'd wrappers integrating the Pallas kernels into the optimizer/model
-stacks, with backend dispatch: real Mosaic lowering on TPU, interpret mode
-elsewhere (so CPU tests execute the same kernel bodies).
+stacks.  Platform handling (real Mosaic lowering on TPU, interpret mode
+elsewhere so CPU tests execute the same kernel bodies) is centralized in
+repro.backend: ``_interpret`` here delegates to ``backend.default_interpret``
+and every wrapper takes an optional ``backend=`` (a repro.backend.Backend)
+whose ``interpret_mode()`` overrides the platform probe, plus an optional
+``spmd=`` plan (backend.FlatSpmd) that reroutes the flat-buffer calls through
+their per-shard shard_map pipelines when the layout actually shards.
 
 Since the flat-state refactor every optimizer entry point here is ONE
 ``pallas_call`` over the ParamLayout flat buffer (kernels/flat_update.py,
@@ -33,6 +38,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import backend as backend_mod
 from repro.core.gsnr import GradStats
 from repro.core.layout import FlatBuffer, ParamLayout, is_flat
 from repro.kernels import flash_attention as fa
@@ -41,7 +47,18 @@ from repro.kernels import flat_update as fu
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """Delegates to the centralized platform probe (repro.backend)."""
+    return backend_mod.default_interpret()
+
+
+def _interp(backend=None) -> bool:
+    return _interpret() if backend is None else backend.interpret_mode()
+
+
+def _spmd_for(spmd, layout: ParamLayout):
+    """The shard plan to use for this layout, or None (gathered path) when
+    no plan was given or the buffer doesn't actually shard/divide."""
+    return spmd if (spmd is not None and spmd.supports(layout)) else None
 
 
 def count_pallas_calls(jaxpr) -> int:
@@ -84,8 +101,10 @@ def _fb(data, layout: ParamLayout) -> FlatBuffer:
     return FlatBuffer(data, layout)
 
 
-def vr_scale_tree(stats: GradStats, grads, gamma: float, eps: float) -> Tuple[Any, Any]:
-    """Fused (scaled_grads, r) over the whole parameter set: one launch.
+def vr_scale_tree(stats: GradStats, grads, gamma: float, eps: float,
+                  backend=None, spmd=None) -> Tuple[Any, Any]:
+    """Fused (scaled_grads, r) over the whole parameter set: one launch
+    (two per-shard launches + a leaf-scalar psum under an spmd plan).
 
     r comes from the group moments; it scales ``grads`` (the possibly
     grad-clipped gradient), matching the jnp path in vrgd._scaled_grads.
@@ -95,7 +114,13 @@ def vr_scale_tree(stats: GradStats, grads, gamma: float, eps: float) -> Tuple[An
     g = _flat(stats.mean, layout)
     ga = _flat(grads, layout)
     g2 = _flat(stats.sq_mean, layout)
-    sg, r = fu.flat_vr_scale(g, ga, g2, layout, gamma=gamma, eps=eps, interpret=_interpret())
+    plan = _spmd_for(spmd, layout)
+    if plan is not None:
+        sg, r = plan.vr_scale(g, ga, g2, layout, gamma=gamma, eps=eps)
+    else:
+        sg, r = fu.flat_vr_scale(
+            g, ga, g2, layout, gamma=gamma, eps=eps, interpret=_interp(backend)
+        )
     return _fb(sg, layout), _fb(r, layout)
 
 
@@ -122,7 +147,7 @@ def _params_flat(params, layout, like):
 
 def vr_adam_update(
     grads, state, stats: GradStats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
-    params, state_dtype: str = "float32",
+    params, state_dtype: str = "float32", backend=None, spmd=None,
 ):
     """Full VR-Adam update as one launch; matches vrgd.vr_adam's jnp path."""
     t, pt, bc1, bc2, bc3 = _bias_corrections(state, b1, b2, b3)
@@ -133,11 +158,18 @@ def vr_adam_update(
     m, v, p = _state_flats(state, layout, state_dtype)
     w = _params_flat(params, layout, g)
     use_wd = wd if params is not None else 0.0
-    upd, m2, v2, p2 = fu.flat_vr_adam(
-        g, ga, g2, m, v, p, w, fu._scal8(lr, bc1, bc2, bc3), layout,
+    scal = fu._scal8(lr, bc1, bc2, bc3)
+    kw = dict(
         b1=b1, b2=b2, b3=b3, eps=eps, wd=use_wd, gamma=gamma, gsnr_eps=gsnr_eps,
-        state_dtype=state_dtype, interpret=_interpret(),
+        state_dtype=state_dtype,
     )
+    plan = _spmd_for(spmd, layout)
+    if plan is not None:
+        upd, m2, v2, p2 = plan.vr_adam(g, ga, g2, m, v, p, w, scal, layout, **kw)
+    else:
+        upd, m2, v2, p2 = fu.flat_vr_adam(
+            g, ga, g2, m, v, p, w, scal, layout, interpret=_interp(backend), **kw
+        )
     new_state = {
         "step": t, "m": _fb(m2, layout), "v": _fb(v2, layout), "p": _fb(p2, layout), "pt": pt,
     }
@@ -146,7 +178,7 @@ def vr_adam_update(
 
 def vr_lamb_update(
     grads, state, stats: GradStats, lr, b1, b2, b3, eps, wd, gamma, gsnr_eps,
-    params, state_dtype: str = "float32",
+    params, state_dtype: str = "float32", backend=None, spmd=None,
 ):
     """Full VR-LAMB update as one launch; matches vrgd.vr_lamb's jnp path."""
     t, pt, bc1, bc2, bc3 = _bias_corrections(state, b1, b2, b3)
@@ -156,18 +188,26 @@ def vr_lamb_update(
     g2 = _flat(stats.sq_mean, layout)
     m, v, p = _state_flats(state, layout, state_dtype)
     w = _params_flat(params, layout, g)
-    upd, m2, v2, p2 = fu.flat_vr_lamb(
-        g, ga, g2, m, v, p, w, fu._scal8(lr, bc1, bc2, bc3), layout,
+    scal = fu._scal8(lr, bc1, bc2, bc3)
+    kw = dict(
         b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
-        state_dtype=state_dtype, interpret=_interpret(),
+        state_dtype=state_dtype,
     )
+    plan = _spmd_for(spmd, layout)
+    if plan is not None:
+        upd, m2, v2, p2 = plan.vr_lamb(g, ga, g2, m, v, p, w, scal, layout, **kw)
+    else:
+        upd, m2, v2, p2 = fu.flat_vr_lamb(
+            g, ga, g2, m, v, p, w, scal, layout, interpret=_interp(backend), **kw
+        )
     new_state = {
         "step": t, "m": _fb(m2, layout), "v": _fb(v2, layout), "p": _fb(p2, layout), "pt": pt,
     }
     return layout.unpack(upd), new_state
 
 
-def vr_lars_update(grads, state, stats: GradStats, lr, mu, wd, trust, gamma, eps, params):
+def vr_lars_update(grads, state, stats: GradStats, lr, mu, wd, trust, gamma, eps,
+                   params, backend=None, spmd=None):
     """Full VR-LARS update as one launch; matches vrgd.vr_lars's jnp path
     (vr_scale -> baselines.lars) leaf for leaf."""
     layout = _layout_for(state["m"], params, stats.mean)
@@ -176,10 +216,16 @@ def vr_lars_update(grads, state, stats: GradStats, lr, mu, wd, trust, gamma, eps
     g2 = _flat(stats.sq_mean, layout)
     m = _flat(state["m"], layout)
     w = _params_flat(params, layout, g)
-    upd, m2 = fu.flat_vr_lars(
-        g, ga, g2, m, w, fu._scal8(lr, gamma), layout,
-        mu=mu, wd=wd, trust=trust, eps=eps, interpret=_interpret(),
-    )
+    scal = fu._scal8(lr, gamma)
+    plan = _spmd_for(spmd, layout)
+    if plan is not None:
+        upd, m2 = plan.vr_lars(g, ga, g2, m, w, scal, layout,
+                               mu=mu, wd=wd, trust=trust, eps=eps)
+    else:
+        upd, m2 = fu.flat_vr_lars(
+            g, ga, g2, m, w, scal, layout,
+            mu=mu, wd=wd, trust=trust, eps=eps, interpret=_interp(backend),
+        )
     new_state = {"step": state["step"] + 1, "m": _fb(m2, layout)}
     return layout.unpack(upd), new_state
 
@@ -214,42 +260,63 @@ def moments_init_flat(layout: ParamLayout):
     return layout.zeros(jnp.float32), layout.zeros(jnp.float32)
 
 
-def moments_accum_flat(g_sum, g2_sum, grads, layout: ParamLayout):
+def moments_accum_flat(g_sum, g2_sum, grads, layout: ParamLayout,
+                       backend=None, spmd=None):
     """One fused microbatch update of both flat moment carries (one launch);
     ``grads`` is the raw gradient pytree, packed here (one cheap DMA)."""
     g = _flat(grads, layout)
-    return fs.flat_moments_accum(g_sum, g2_sum, g, layout, interpret=_interpret())
+    plan = _spmd_for(spmd, layout)
+    if plan is not None:
+        return plan.moments_accum(g_sum, g2_sum, g, layout)
+    return fs.flat_moments_accum(g_sum, g2_sum, g, layout, interpret=_interp(backend))
 
 
-def moments_finalize_flat(g_sum, g2_sum, k, layout: ParamLayout) -> GradStats:
+def g_accum_flat(g_sum, grads, layout: ParamLayout, backend=None, spmd=None):
+    """One fused microbatch update of the g-only flat carry (stale-GSNR
+    steps, squares=False): a single launch, no Σg² stream."""
+    g = _flat(grads, layout)
+    plan = _spmd_for(spmd, layout)
+    if plan is not None:
+        return plan.g_accum(g_sum, g, layout)
+    return fs.flat_g_accum(g_sum, g, layout, interpret=_interp(backend))
+
+
+def moments_finalize_flat(g_sum, g2_sum, k, layout: ParamLayout,
+                          backend=None, spmd=None) -> GradStats:
     """Fused /k normalize (one launch) -> GradStats carrying FlatBuffers."""
-    mean, sq = fs.flat_moments_finalize(g_sum, g2_sum, k, layout, interpret=_interpret())
+    plan = _spmd_for(spmd, layout)
+    if plan is not None:
+        mean, sq = plan.moments_finalize(g_sum, g2_sum, k, layout)
+    else:
+        mean, sq = fs.flat_moments_finalize(
+            g_sum, g2_sum, k, layout, interpret=_interp(backend)
+        )
     return GradStats(mean=_fb(mean, layout), sq_mean=_fb(sq, layout), k=k)
 
 
-def vmap_moments_flat(gs_tree, layout: ParamLayout, k: int) -> GradStats:
+def vmap_moments_flat(gs_tree, layout: ParamLayout, k: int, backend=None) -> GradStats:
     """Batched (k, param) gradient stack -> GradStats in one launch (the
     vmap stats method; see accumulate.grad_stats)."""
     gstack = jax.vmap(lambda t: layout.pack(t, jnp.float32))(gs_tree)
-    mean, sq = fs.flat_vmap_moments(gstack, layout, k, interpret=_interpret())
+    mean, sq = fs.flat_vmap_moments(gstack, layout, k, interpret=_interp(backend))
     return GradStats(mean=_fb(mean, layout), sq_mean=_fb(sq, layout), k=k)
 
 
 def flash_attention(qh, k, v, q_pos=None, k_pos=None, *, q_seg=None, k_seg=None,
-                    causal: bool = True, window: int = 0):
+                    causal: bool = True, window: int = 0, backend=None):
     """Adapter for models/attention.py: qh (B,S,KV,G,D) -> (B,S,KV,G,D).
 
     Differentiable: the kernel carries a custom VJP whose backward runs the
     fused Pallas dq and dk/dv kernels (kernels/flash_attention_bwd.py), so
-    use_pallas training keeps the whole attention fwd+bwd on the fused path.
-    Positions/segments are explicit kernel operands (packed and offset
-    layouts run fused); omitted positions mean the implicit arange layout.
-    Segment ids are derived from the positions when not supplied.
+    fused-attention training keeps the whole attention fwd+bwd on the fused
+    path.  Positions/segments are explicit kernel operands (packed and
+    offset layouts run fused); omitted positions mean the implicit arange
+    layout.  Segment ids are derived from the positions when not supplied.
     """
     b, s, kvh, g, d = qh.shape
     q = qh.reshape(b, s, kvh * g, d)
     out = fa.flash_attention(
         q, k, v, q_pos, k_pos, q_seg, k_seg,
-        causal=causal, window=window, interpret=_interpret(),
+        causal=causal, window=window, interpret=_interp(backend),
     )
     return out.reshape(b, s, kvh, g, d)

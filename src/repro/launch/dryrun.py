@@ -67,10 +67,15 @@ def build_lowered(cfg, shape, mesh, rules):
     pshard = param_shardings(psds, rules)
 
     if shape.mode == "train":
+        from repro.backend import resolve_backend
+
         loss_fn = make_loss_fn(cfg)
-        # flat-state runs (cfg.parallel.use_pallas) lower with FlatBuffer
-        # optimizer state — eval_shape sees the packed (rows, 128) buffers
-        opt = make_optimizer(cfg.optimizer, use_pallas=cfg.parallel.use_pallas)
+        bk = resolve_backend(cfg.parallel, where="dryrun")
+        # a fused-optimizer plan lowers with FlatBuffer optimizer state —
+        # eval_shape sees the packed (rows, 128) buffers — and the shard
+        # plan routes the flat pallas_calls per-shard over the FSDP rows
+        spmd = bk.shard(mesh, rules)
+        opt = make_optimizer(cfg.optimizer, backend=bk, spmd=spmd)
         opt_sds = jax.eval_shape(opt.init, psds)
         opt_shard = param_shardings(opt_sds, rules)
         batch_sds = train_specs(cfg, shape)
@@ -84,13 +89,13 @@ def build_lowered(cfg, shape, mesh, rules):
             if stale:
                 loss, aux, stats_ = grad_stats(
                     loss_fn, state.params, batch, k, has_aux=True, method=method,
-                    squares=False,
+                    squares=False, backend=bk, spmd=spmd,
                 )
                 grads, stats = stats_.mean, None
             else:
                 loss, aux, stats = grad_stats(
                     loss_fn, state.params, batch, k, has_aux=True, method=method,
-                    use_pallas=cfg.parallel.use_pallas,
+                    backend=bk, spmd=spmd,
                 )
                 grads = stats.mean
             upd, opt_state = opt.update(grads, state.opt_state, state.params, stats=stats)

@@ -9,8 +9,9 @@ Three execution paths:
                  ("flash attention in jnp"); the default for long prefill.
                  This is also the reference semantics for the Pallas kernel
                  in kernels/flash_attention.py.
-  * kernel     — pl.pallas_call flash attention (TPU target); enabled via
-                 ParallelismConfig.use_pallas for self-attention TRAIN and
+  * kernel     — pl.pallas_call flash attention (TPU target); selected by a
+                 Backend plan with a fused ``attention`` subsystem
+                 (repro.backend) for self-attention TRAIN and
                  prefill.  The kernel carries a custom VJP with fused Pallas
                  backward kernels (kernels/flash_attention_bwd.py) and takes
                  EXPLICIT position/segment operands, so packed and offset
@@ -33,6 +34,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.backend import Backend, resolve_backend
 from repro.kernels.flash_attention import segment_ids_from_positions
 from repro.models.common import apply_rope, normal_init
 
@@ -181,8 +183,9 @@ def attention(
     mode: str = "train",
     attn_chunk: int = 1024,
     cache_len: int = 0,
-    use_pallas: bool = False,
+    backend: Optional[Backend] = None,
     implicit_layout: bool = False,
+    use_pallas=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Self- or cross-attention.
 
@@ -203,8 +206,12 @@ def attention(
     positions run fused regardless): it keeps the kernel on the free
     grid-index dead-tile predicate and skips the segment-id cumsum — the
     derived segments of an arange are identically zero.
+    backend: the execution plan (repro.backend.Backend); its ``attention``
+    subsystem selects the fused kernel vs the jnp paths.  The deprecated
+    boolean keyword maps through the shim (warns once).
     Returns (out (B,S,d), cache or None).
     """
+    bk = resolve_backend(backend, use_pallas=use_pallas, where="models.attention")
     b, s, _ = x.shape
     g = n_heads // n_kv_heads
     dtype = x.dtype
@@ -278,7 +285,7 @@ def attention(
     self_fresh = not cross and mode in ("train", "prefill")
     derive_segs = self_fresh and not implicit_layout
     q_seg = k_seg = segment_ids_from_positions(q_pos) if derive_segs else None
-    if use_pallas and self_fresh and k.shape[1] == s:
+    if bk.fused("attention") and self_fresh and k.shape[1] == s:
         # Fused path for train AND prefill: the kernel carries a custom VJP
         # (fused dq and dk/dv Pallas kernels), so the training forward and
         # backward both stay on Pallas.  The kernel takes the positions and
@@ -288,11 +295,12 @@ def attention(
         from repro.kernels import ops as kops
 
         if implicit_layout:
-            out = kops.flash_attention(qh, k, v, causal=causal, window=window)
+            out = kops.flash_attention(qh, k, v, causal=causal, window=window,
+                                       backend=bk)
         else:
             out = kops.flash_attention(
                 qh, k, v, q_pos, k_pos, q_seg=q_seg, k_seg=k_seg,
-                causal=causal, window=window,
+                causal=causal, window=window, backend=bk,
             )
     elif attn_chunk and naive_elems > attn_chunk * attn_chunk * 4:
         out = _chunked_sdpa(qh, k, v, q_pos, k_pos, causal, window, attn_chunk,

@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.backend import resolve_backend
 from repro.configs.base import ModelConfig, ParallelismConfig
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
@@ -107,7 +108,7 @@ def _block_apply(
         q_pos=q_pos,
         mode=mode,
         attn_chunk=pcfg.attn_chunk,
-        use_pallas=pcfg.use_pallas,
+        backend=resolve_backend(pcfg),
         implicit_layout=implicit_layout,
     )
     if kind in ("attn", "swa", "local", "xattn"):

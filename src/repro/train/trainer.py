@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Iterable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.backend import resolve_backend
 from repro.configs.base import Config
 from repro.core import grad_only, grad_stats, gsnr_scale, gsnr_summary, make_optimizer
 from repro.core.distributed import device_grad_stats_fn
@@ -29,6 +30,21 @@ from repro.train.train_state import TrainState
 _tm = jax.tree_util.tree_map
 
 
+def _shard_plan(backend, mesh):
+    """Backend.shard over the active rules (or fresh defaults for the mesh):
+    the flat-buffer optimizer/stats pallas_calls then run per-shard on the
+    FSDP-sharded buffer rows instead of gathering (supports() falls back
+    gracefully when the buffer doesn't shard or divide)."""
+    if mesh is None:
+        return None
+    from repro.sharding.rules import Rules, active_rules
+
+    rules = active_rules()
+    if rules is None or rules.mesh is not mesh:
+        rules = Rules(mesh=mesh)
+    return backend.shard(mesh, rules)
+
+
 def make_train_step(
     cfg: Config,
     loss_fn: Optional[Callable] = None,
@@ -37,14 +53,15 @@ def make_train_step(
 ) -> Tuple[Callable, Any]:
     """Returns (train_step(state, batch) -> (state, metrics), optimizer)."""
     opt_cfg = cfg.optimizer
-    opt = make_optimizer(opt_cfg, use_pallas=cfg.parallel.use_pallas)
+    bk = resolve_backend(cfg.parallel, where="make_train_step")
+    spmd = _shard_plan(bk, mesh)
+    opt = make_optimizer(opt_cfg, backend=bk, spmd=spmd)
     loss_fn = loss_fn or make_loss_fn(cfg)
     is_vr = opt_cfg.is_vr
     use_device_stats = is_vr and opt_cfg.gsnr_source == "data_axis" and mesh is not None
     if use_device_stats:
         stats_fn = device_grad_stats_fn(
-            lambda p, b: loss_fn(p, b), mesh, has_aux=True,
-            flat=cfg.parallel.use_pallas,
+            lambda p, b: loss_fn(p, b), mesh, has_aux=True, backend=bk,
         )
 
     def train_step(state: TrainState, batch, with_stats: bool = True) -> Tuple[TrainState, Dict]:
@@ -54,15 +71,17 @@ def make_train_step(
             else:
                 loss, aux, stats = grad_stats(
                     loss_fn, state.params, batch, opt_cfg.k, has_aux=True,
-                    method=opt_cfg.stats_method, use_pallas=cfg.parallel.use_pallas,
+                    method=opt_cfg.stats_method, backend=bk, spmd=spmd,
                 )
             grads = stats.mean
         elif is_vr:
             # amortized-GSNR "stale" step: microbatched mean gradient only —
-            # the Σg² tree (one param-sized f32 buffer) is skipped (§Perf)
+            # the Σg² stream (one param-sized f32 buffer) is skipped (§Perf);
+            # with fused stats the mean-gradient carry stays a flat buffer
+            # (g-only accumulation kernel) instead of a jnp tree
             loss, aux, stats_ = grad_stats(
                 loss_fn, state.params, batch, opt_cfg.k, has_aux=True,
-                method=opt_cfg.stats_method, squares=False,
+                method=opt_cfg.stats_method, squares=False, backend=bk, spmd=spmd,
             )
             grads, stats = stats_.mean, None
         else:
@@ -91,11 +110,11 @@ def init_state(cfg: Config, key=None, params=None) -> TrainState:
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     if params is None:
         params = init_params(cfg.model, key, scan_layers=cfg.parallel.scan_layers)
-    # use_pallas must thread through here too: the flat-state optimizer's
+    # the Backend plan must thread through here too: a fused-optimizer plan's
     # init produces FlatBuffer moments, and the state structure has to match
     # the transform make_train_step builds (a pytree-state checkpoint still
     # restores into either — see train/checkpoint.py).
-    opt = make_optimizer(cfg.optimizer, use_pallas=cfg.parallel.use_pallas)
+    opt = make_optimizer(cfg.optimizer, backend=resolve_backend(cfg.parallel, where="init_state"))
     opt_state = opt.init(params)
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32))
 
@@ -142,5 +161,6 @@ def train_loop(
             print(
                 f"  step {i:5d} loss {m['loss']:.4f} |g| {m['grad_norm']:.3f}"
                 + (f" gsnr {m.get('gsnr/mean', 0):.3f}" if "gsnr/mean" in m else "")
+                + (f" pack {m['pack_efficiency']:.2f}" if "pack_efficiency" in m else "")
             )
     return state, history
