@@ -1,0 +1,126 @@
+"""Continuous-batching serving benchmark: mixed prefill/decode traffic
+through the paged segment-aware cache (serve/ContinuousEngine).
+
+Requests with ragged prompt lengths arrive staggered, so admissions (packed
+chunk prefills) land while other lanes are mid-decode — every such step runs
+one packed train-path prefill AND one fused-decode batch against the same
+paged cache.  Reports sustained tokens/s and per-request p50/p99 latency
+(submit -> finish), plus how many steps actually carried mixed traffic.
+
+The machine-readable record lands in BENCH_serve.json next to
+BENCH_flat_state.json, stamped with the fully-resolved backend ``plan``
+(Backend.describe()) and guarded by the same mixed-plan refusal
+(benchmarks/common.py + run.py): CPU-interpret numbers can never silently
+merge with a TPU fused rerun.  On CPU the absolute latencies carry Pallas
+interpreter overhead — structural check only; TPU is the real measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import check_plans_agree, emit
+from repro.backend import Backend
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.serve import ContinuousEngine
+
+BENCH_SERVE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else float("nan")
+
+
+def main(fast: bool = False) -> None:
+    t0 = time.time()
+    plan = Backend.all_fused()
+    cfg = get_smoke("internlm2-1.8b")
+    cfg = cfg.replace(parallel=dataclasses.replace(cfg.parallel, backend=plan))
+    params = init_params(cfg.model, jax.random.PRNGKey(0))
+
+    rows, lanes, cache_len, chunk = 2, 2, 48, 12
+    n_req = 5 if fast else 10
+    eng = ContinuousEngine(
+        cfg, params, rows=rows, lanes=lanes, cache_len=cache_len, chunk=chunk
+    )
+
+    # compile prefill + decode before the timed window
+    warm = eng.submit(np.arange(4) % cfg.model.vocab_size, 2)
+    eng.run()
+    assert len(eng.result(warm).tokens) == 2
+
+    rs = np.random.RandomState(0)
+    reqs = [
+        (
+            rs.randint(0, cfg.model.vocab_size, size=(int(rs.randint(3, chunk // 2 + 1)),)),
+            int(rs.randint(4, 9)),
+        )
+        for _ in range(n_req)
+    ]
+
+    submit_t, finish_t = {}, {}
+    # a third up-front, then one per tick: later admissions hit rows whose
+    # other lane is mid-decode (the mixed prefill/decode steps under test)
+    upfront = max(1, n_req // 3)
+    nxt = 0
+    t_start = time.time()
+    while nxt < upfront:
+        rid = eng.submit(*reqs[nxt])
+        submit_t[rid] = time.time()
+        nxt += 1
+    steps = mixed_steps = 0
+    while eng.pending or eng.active or nxt < n_req:
+        if nxt < n_req:
+            rid = eng.submit(*reqs[nxt])
+            submit_t[rid] = time.time()
+            nxt += 1
+        info = eng.step()
+        steps += 1
+        if info["admitted"] and info["decoded"]:
+            mixed_steps += 1
+        now = time.time()
+        for rid in info["finished"]:
+            finish_t[rid] = now
+    wall = time.time() - t_start
+
+    n_tokens = sum(len(eng.result(rid).tokens) for rid in submit_t)
+    lat_ms = [(finish_t[rid] - submit_t[rid]) * 1e3 for rid in submit_t]
+    p50, p99 = _percentile(lat_ms, 50), _percentile(lat_ms, 99)
+    tps = n_tokens / wall
+    assert mixed_steps > 0, "traffic never mixed prefill with decode - bench is vacuous"
+
+    emit("serve_tokens_per_s", wall / max(n_tokens, 1) * 1e6,
+         f"tok/s={tps:.1f};reqs={n_req};note=CPU-interpret")
+    emit("serve_latency_p50", p50 * 1e3, f"ms={p50:.1f}")
+    emit("serve_latency_p99", p99 * 1e3, f"ms={p99:.1f}")
+    emit("serve_mixed_steps", 0.0, f"mixed={mixed_steps}/{steps}")
+
+    rec = {
+        "engine": {"rows": rows, "lanes": lanes, "cache_len": cache_len, "chunk": chunk},
+        "traffic": {"requests": n_req, "tokens": n_tokens, "steps": steps,
+                    "mixed_steps": mixed_steps},
+        "tokens_per_s": tps,
+        "latency_ms": {"p50": p50, "p99": p99},
+        # the resolved execution plan; interpret=True marks CPU-interpret
+        # numbers (structural only) — TPU reruns write interpret=False and the
+        # run.py gate refuses a record that mixes the two
+        "plan": plan.describe(),
+        "interpret": plan.interpret_mode(),
+        "backend": jax.default_backend(),
+        "note": "CPU interpret mode: latency/throughput structural only",
+    }
+    check_plans_agree(rec, what="bench_serve record")
+    with open(BENCH_SERVE, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {os.path.abspath(BENCH_SERVE)}")
+    print(f"# bench_serve done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

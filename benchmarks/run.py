@@ -8,6 +8,7 @@
   bench_dlrm_proxy   Table 5 (CTR AUC vs batch, SGD vs VR-SGD)
   bench_overhead     VRGD systems cost (step overhead + fused kernel)
   bench_roofline     §Roofline terms from the dry-run artifacts
+  bench_serve        continuous-batching serving (mixed prefill/decode)
 
 ``python -m benchmarks.run``            full pass (CPU, ~15 min)
 ``python -m benchmarks.run --fast``     reduced sweeps (~4 min)
@@ -30,28 +31,36 @@ MODULES = [
     "dlrm_proxy",
     "overhead",
     "roofline",
+    "serve",
 ]
 
-BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_flat_state.json")
+_HERE = os.path.dirname(__file__)
+BENCH_JSONS = [
+    os.path.join(_HERE, "..", "BENCH_flat_state.json"),
+    os.path.join(_HERE, "..", "BENCH_serve.json"),
+]
 
 
 def validate_bench_plans() -> bool:
-    """Post-run gate: every ``plan`` marker inside BENCH_flat_state.json must
-    agree (one resolved Backend per record file) — a record mixing, say, a
-    TPU fused rerun with leftover CPU-interpret sub-records is refused here
-    even if it was hand-assembled rather than merged through common.py."""
-    if not os.path.exists(BENCH_JSON):
-        return True
+    """Post-run gate: every ``plan`` marker inside each machine-readable
+    record file must agree (one resolved Backend per record file) — a record
+    mixing, say, a TPU fused rerun with leftover CPU-interpret sub-records is
+    refused here even if it was hand-assembled rather than merged through
+    common.py."""
     from benchmarks.common import check_plans_agree
 
-    with open(BENCH_JSON) as f:
-        rec = json.load(f)
-    try:
-        check_plans_agree(rec, what=os.path.basename(BENCH_JSON))
-    except ValueError as e:
-        print(f"# {e}", file=sys.stderr)
-        return False
-    return True
+    ok = True
+    for path in BENCH_JSONS:
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        try:
+            check_plans_agree(rec, what=os.path.basename(path))
+        except ValueError as e:
+            print(f"# {e}", file=sys.stderr)
+            ok = False
+    return ok
 
 
 def main() -> None:

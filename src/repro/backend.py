@@ -244,8 +244,13 @@ class FlatSpmd:
     kernel runs on the local row block with the per-block leaf-id map riding
     as a sharded operand, and cross-shard per-leaf scalars combine through a
     single psum of the (leaf_slots, LANE) partial accumulator.  Falls back
-    (``supports() == False``) when the rules leave the buffer replicated or
-    the block count does not divide across the shards.
+    (``supports() == False``) only when the rules leave the buffer
+    replicated: a block count that does not divide across the shards is
+    handled by padding the rows dimension with zero blocks (leaf id 0) up to
+    the next multiple — zero rows contribute exact-zero partials to every
+    per-leaf psum (r, trust numerator/denominator), so the padded math is
+    bit-identical to the divisible case, and the pad rows are sliced off the
+    outputs.
     """
 
     def __init__(self, mesh, rules, backend: Backend):
@@ -275,10 +280,22 @@ class FlatSpmd:
         return n
 
     def supports(self, layout) -> bool:
-        """True when the flat buffer for ``layout`` actually shards here and
-        every shard holds a whole number of grid blocks."""
+        """True when the flat buffer for ``layout`` actually shards here.
+        Block counts that don't divide the shard count are padded internally
+        (class docstring), so divisibility is no longer a gate."""
+        return self.n_shards(layout) > 1
+
+    def _pad_rows(self, layout) -> int:
+        """Zero rows appended so every shard holds a whole number of grid
+        blocks (0 when the block count already divides)."""
         n = self.n_shards(layout)
-        return n > 1 and layout.n_blocks % n == 0
+        return 0 if n <= 1 else ((-layout.n_blocks) % n) * layout.block_rows
+
+    @staticmethod
+    def _padded(x, rows: int):
+        if rows == 0:
+            return x
+        return jnp.pad(x, ((0, rows),) + ((0, 0),) * (x.ndim - 1))
 
     # -- plumbing -----------------------------------------------------------
 
@@ -293,12 +310,17 @@ class FlatSpmd:
             fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs, **_SHMAP_KW
         )
 
-    def _meta(self, layout):
+    def _meta(self, layout, pad: int = 0):
         import numpy as np
 
         lids = jnp.asarray(layout.block_leaf_ids())
         invsz = jnp.asarray(layout.leaf_inv_sizes())
         rl = jnp.asarray(np.asarray(layout.row_leaf_ids()))
+        if pad:
+            # pad blocks carry leaf id 0: their zero rows contribute exact
+            # zeros to leaf 0's partial sums (additive no-ops)
+            lids = jnp.pad(lids, ((0, pad // layout.block_rows), (0, 0)))
+            rl = jnp.pad(rl, (0, pad))
         return lids, invsz, rl
 
     # -- flat-stats sweeps (element-wise: shard with no collective) ---------
@@ -307,26 +329,38 @@ class FlatSpmd:
         from repro.kernels import flat_stats as fs
 
         interp = self._interp()
+        pad = self._pad_rows(layout)
         row = self._row_spec(layout)
         body = lambda a, b, c: fs.flat_moments_accum(a, b, c, layout, interpret=interp)
-        return self._smap(body, (row, row, row), (row, row))(gs, g2s, g)
+        out = self._smap(body, (row, row, row), (row, row))(
+            self._padded(gs, pad), self._padded(g2s, pad), self._padded(g, pad)
+        )
+        return tuple(o[: layout.n_rows] for o in out)
 
     def g_accum(self, gs, g, layout):
         from repro.kernels import flat_stats as fs
 
         interp = self._interp()
+        pad = self._pad_rows(layout)
         row = self._row_spec(layout)
         body = lambda a, b: fs.flat_g_accum(a, b, layout, interpret=interp)
-        return self._smap(body, (row, row), row)(gs, g)
+        out = self._smap(body, (row, row), row)(
+            self._padded(gs, pad), self._padded(g, pad)
+        )
+        return out[: layout.n_rows]
 
     def moments_finalize(self, gs, g2s, k, layout):
         from repro.kernels import flat_stats as fs
 
         interp = self._interp()
+        pad = self._pad_rows(layout)
         row = self._row_spec(layout)
         body = lambda a, b, kk: fs.flat_moments_finalize(a, b, kk, layout, interpret=interp)
         k = jnp.asarray(k, jnp.float32)
-        return self._smap(body, (row, row, P()), (row, row))(gs, g2s, k)
+        out = self._smap(body, (row, row, P()), (row, row))(
+            self._padded(gs, pad), self._padded(g2s, pad), k
+        )
+        return tuple(o[: layout.n_rows] for o in out)
 
     # -- optimizer updates (partials kernel -> psum -> apply kernel) --------
 
@@ -335,7 +369,8 @@ class FlatSpmd:
 
         interp = self._interp()
         axes = self._axes(layout)
-        lids, invsz, _ = self._meta(layout)
+        pad = self._pad_rows(layout)
+        lids, invsz, _ = self._meta(layout, pad)
         row = self._row_spec(layout)
 
         def body(lids, invsz, g, ga, g2):
@@ -346,9 +381,10 @@ class FlatSpmd:
                 interpret=interp,
             )
 
-        return self._smap(
+        out = self._smap(
             body, (row, P(None, None), row, row, row), (row, row)
-        )(lids, invsz, g, ga, g2)
+        )(lids, invsz, self._padded(g, pad), self._padded(ga, pad), self._padded(g2, pad))
+        return tuple(o[: layout.n_rows] for o in out)
 
     def vr_adam(self, g, ga, g2, m, v, p, w, scal, layout, *,
                 b1, b2, b3, eps, wd, gamma, gsnr_eps, state_dtype):
@@ -356,7 +392,8 @@ class FlatSpmd:
 
         interp = self._interp()
         axes = self._axes(layout)
-        lids, invsz, _ = self._meta(layout)
+        pad = self._pad_rows(layout)
+        lids, invsz, _ = self._meta(layout, pad)
         row = self._row_spec(layout)
         rep = P(None, None)
 
@@ -369,9 +406,10 @@ class FlatSpmd:
                 gsnr_eps=gsnr_eps, state_dtype=state_dtype, interpret=interp,
             )
 
-        return self._smap(
+        out = self._smap(
             body, (row, rep, rep) + (row,) * 7, (row,) * 4
-        )(lids, invsz, scal, g, ga, g2, m, v, p, w)
+        )(lids, invsz, scal, *(self._padded(x, pad) for x in (g, ga, g2, m, v, p, w)))
+        return tuple(o[: layout.n_rows] for o in out)
 
     def vr_lamb(self, g, ga, g2, m, v, p, w, scal, layout, *,
                 b1, b2, b3, eps, wd, gamma, gsnr_eps, state_dtype):
@@ -379,7 +417,8 @@ class FlatSpmd:
 
         interp = self._interp()
         axes = self._axes(layout)
-        lids, invsz, rl = self._meta(layout)
+        pad = self._pad_rows(layout)
+        lids, invsz, rl = self._meta(layout, pad)
         row = self._row_spec(layout)
         rep = P(None, None)
 
@@ -399,16 +438,18 @@ class FlatSpmd:
             upd = -scal[0, 0] * ratio[rl][:, None] * u
             return upd, m2, v2, p2
 
-        return self._smap(
+        out = self._smap(
             body, (row, rep, P(axes), rep) + (row,) * 7, (row,) * 4
-        )(lids, invsz, rl, scal, g, ga, g2, m, v, p, w)
+        )(lids, invsz, rl, scal, *(self._padded(x, pad) for x in (g, ga, g2, m, v, p, w)))
+        return tuple(o[: layout.n_rows] for o in out)
 
     def vr_lars(self, g, ga, g2, m, w, scal, layout, *, mu, wd, trust, eps):
         from repro.kernels import flat_spmd as fsp
 
         interp = self._interp()
         axes = self._axes(layout)
-        lids, invsz, rl = self._meta(layout)
+        pad = self._pad_rows(layout)
+        lids, invsz, rl = self._meta(layout, pad)
         row = self._row_spec(layout)
         rep = P(None, None)
 
@@ -425,6 +466,7 @@ class FlatSpmd:
             m_new = mu * m.astype(jnp.float32) + ratio[rl][:, None] * u
             return -scal[0, 0] * m_new, m_new
 
-        return self._smap(
+        out = self._smap(
             body, (row, rep, P(axes), rep) + (row,) * 5, (row, row)
-        )(lids, invsz, rl, scal, g, ga, g2, m, w)
+        )(lids, invsz, rl, scal, *(self._padded(x, pad) for x in (g, ga, g2, m, w)))
+        return tuple(o[: layout.n_rows] for o in out)

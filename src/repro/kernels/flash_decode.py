@@ -1,0 +1,87 @@
+"""Fused decode attention over a paged KV cache (forward-only flash).
+
+Decode is the last attention site that stayed on jnp: queries are a handful
+of lanes per row (Sq = L, typically 1-4) attending a cache of C slots whose
+order is ARRIVAL order, not position order.  The training flash kernel
+already takes fully explicit (q_pos, k_pos, q_seg, k_seg) operands and its
+``_load_pos_seg`` / ``tile_reachable`` machinery masks purely from those
+values — slot order never enters the math — so decode reuses the same
+``_fwd_call`` launcher with Sq != Skv and no LSE output (inference only, no
+VJP; differentiating through this path raises).
+
+EXPLICIT-SEGMENT CONTRACT: both q_seg and k_seg are REQUIRED here.  The
+cache's kseg carries row-global segment numbering (models/attention.py) and
+a decode query stream is a different position stream than the cache —
+derived per-stream ordinals cannot align (resolve_positions docstring), so
+there is no safe default to fall back to.
+
+Mosaic checklist (pallas_guide):
+  * f32 min tile is (8, 128): the lane axis is the kernel's sublane axis, so
+    L is padded up to a multiple of 8 with pos = -1 / seg = -1 pad lanes
+    (masked rows emit exact 0 and are sliced off).
+  * block_q covers the whole padded lane axis (one q tile per row); block_k
+    tiles the cache, so dead cache tiles (kpos still -1 past the fill
+    cursor) are skipped by tile_reachable's pos/seg bounds.
+  * iota inside the kernel is rank-2 (handled by _load_pos_seg already).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import DEFAULT_BLOCK_K, _fwd_call
+
+SUBLANE = 8  # f32 min sublane count — pad the lane axis up to this multiple
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_k", "interpret")
+)
+def flash_decode(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    k_pos: jnp.ndarray,
+    q_seg: jnp.ndarray,
+    k_seg: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q: (B,L,H,D) decode lanes; k,v: (B,C,KV,D) paged cache -> (B,L,H,D).
+
+    q_pos/q_seg: (B, L) int32 per-lane absolute position / row-global
+    segment id (-1 = idle lane, emits exact 0); k_pos/k_seg: (B, C) int32
+    per-slot position / segment (-1 = empty slot).  All four are required —
+    see the module docstring.  NOT differentiable (inference only).
+    """
+    if q_pos is None or k_pos is None or q_seg is None or k_seg is None:
+        raise ValueError(
+            "flash_decode: q_pos, k_pos, q_seg and k_seg are all required — "
+            "cache slot order is arbitrary and cross-stream segment ordinals "
+            "cannot be derived (see kernels/flash_decode.py docstring)"
+        )
+    b, l, h, d = q.shape
+    skv = k.shape[1]
+    lp = -(-l // SUBLANE) * SUBLANE
+    pad = lp - l
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (b, l))
+    q_seg = jnp.broadcast_to(jnp.asarray(q_seg, jnp.int32), (b, l))
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+        q_seg = jnp.pad(q_seg, ((0, 0), (0, pad)), constant_values=-1)
+    k_pos = jnp.broadcast_to(jnp.asarray(k_pos, jnp.int32), (b, skv))
+    k_seg = jnp.broadcast_to(jnp.asarray(k_seg, jnp.int32), (b, skv))
+    out = _fwd_call(
+        q, k, v, q_pos, k_pos, q_seg, k_seg,
+        causal=causal, window=window,
+        block_q=lp, block_k=min(block_k, skv),
+        interpret=interpret, with_lse=False, implicit=False,
+    )[0]
+    return out[:, :l]

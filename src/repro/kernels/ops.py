@@ -320,3 +320,20 @@ def flash_attention(qh, k, v, q_pos=None, k_pos=None, *, q_seg=None, k_seg=None,
         causal=causal, window=window, interpret=_interp(backend),
     )
     return out.reshape(b, s, kvh, g, d)
+
+
+def flash_decode(qh, k, v, q_pos, k_pos, q_seg, k_seg, *,
+                 causal: bool = True, window: int = 0, backend=None):
+    """Adapter for models/attention.py decode: qh (B,L,KV,G,D) lanes against
+    a paged (B,C,KV,D) cache -> (B,L,KV,G,D).  Forward-only (no VJP); all
+    four position/segment operands are required — see kernels/flash_decode.py.
+    """
+    from repro.kernels import flash_decode as fd
+
+    b, l, kvh, g, d = qh.shape
+    q = qh.reshape(b, l, kvh * g, d)
+    out = fd.flash_decode(
+        q, k, v, q_pos, k_pos, q_seg, k_seg,
+        causal=causal, window=window, interpret=_interp(backend),
+    )
+    return out.reshape(b, l, kvh, g, d)

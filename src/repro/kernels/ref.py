@@ -173,3 +173,21 @@ def attention_ref(
         q, k, v, causal=causal, window=window, q_offset=q_offset,
         q_pos=q_pos, k_pos=k_pos, q_seg=q_seg, k_seg=k_seg,
     )[0]
+
+
+def decode_attention_ref(
+    q, k, v, q_pos, k_pos, q_seg, k_seg, *, causal: bool = True, window: int = 0,
+):
+    """Paged-decode oracle: L query lanes against a C-slot paged cache.
+
+    Slot order is arbitrary (arrival order, not position order) — the mask
+    reads only the explicit per-slot (k_pos, k_seg) and per-lane
+    (q_pos, q_seg), which is why this is just attention_ref with every
+    operand explicit.  Idle lanes (q_pos < 0) and empty slots (k_pos < 0)
+    are masked; a lane with no reachable slot emits exactly 0.  The allclose
+    target for kernels/flash_decode.py.
+    """
+    return attention_ref(
+        q, k, v, causal=causal, window=window,
+        q_pos=q_pos, k_pos=k_pos, q_seg=q_seg, k_seg=k_seg,
+    )

@@ -15,17 +15,29 @@ Three execution paths:
                  prefill.  The kernel carries a custom VJP with fused Pallas
                  backward kernels (kernels/flash_attention_bwd.py) and takes
                  EXPLICIT position/segment operands, so packed and offset
-                 position layouts run fused too — only decode and
-                 cross-attention (ragged cache-explicit kv) fall back to the
-                 jnp paths.
+                 position layouts run fused too.  Self-attention DECODE runs
+                 a forward-only flash kernel over the paged cache
+                 (kernels/flash_decode.py) — only cross-attention (ragged
+                 memory-explicit kv) falls back to the jnp paths.
 
 All three paths share one masking contract: positions < 0 are padding,
 causal/window compare absolute positions, and segment ids — derived from
 positions by segment_ids_from_positions (a new segment wherever the position
 does not increase by exactly 1) — gate cross-document attention in packed
-rows.  KV caches are position-explicit: each slot stores its absolute
-position (`kpos`, -1 = empty) so full caches and sliding-window ring buffers
-share the same rule.
+rows.  Decode additionally runs a dedicated fused path
+(kernels/flash_decode.py) when the plan's ``attention`` subsystem is fused.
+
+KV caches are PAGED and segment-aware: a slot is assigned by SEQUENCE INDEX
+(a per-row ``fill`` cursor counting tokens ever written, mod cache_len — NOT
+by position, which collides across the documents of a packed row), and every
+slot stores its absolute position (``kpos``, -1 = empty) AND its row-global
+segment id (``kseg``).  Attention over the cache is therefore order-
+independent: the mask reads only (kpos, kseg), so documents may interleave
+arbitrarily in slot order — several in-flight requests can share one cache
+row, each gated to its own segment.  Full caches and sliding-window ring
+buffers share the same rule (the fill cursor wraps, evicting in arrival
+order).  ``seg_base`` offsets the segment ids stored by a prefill so a chunk
+appended to a partially-used row continues the row's segment numbering.
 """
 from __future__ import annotations
 
@@ -185,22 +197,27 @@ def attention(
     cache_len: int = 0,
     backend: Optional[Backend] = None,
     implicit_layout: bool = False,
+    q_seg: Optional[jnp.ndarray] = None,
+    seg_base: Optional[jnp.ndarray] = None,
     use_pallas=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Self- or cross-attention.
 
-    mode: "train" (no cache), "prefill" (returns fresh cache), "decode"
-    (consumes/returns cache; x is (B, 1, d)).
+    mode: "train" (no cache), "prefill" (builds a fresh cache, or APPENDS
+    into an existing one when ``cache`` is passed), "decode" (consumes/
+    returns cache; x is (B, L, d) — L lanes decode in lock-step per row).
     memory: (B, M, d) for cross-attention (causal/window ignored).
     q_pos: (B, S) int32 absolute positions; pos < 0 marks padding.  Packed
-    and offset layouts are first-class for train/prefill attention math:
-    segment ids are derived from the positions
-    (segment_ids_from_positions) and gate cross-document attention on the
-    jnp paths AND the fused kernel — the old ``implicit_pos`` jnp fallback
-    is gone.  NOT segment-aware: the prefill cache scatter (slot = pos % c
-    assumes one document per row — packed rows would collide slots) and
-    decode over a cache (seg=None) — packed rows are a training/prefill-
-    attention layout, not a serving cache layout (see ROADMAP).
+    and offset layouts are first-class everywhere: segment ids gate
+    cross-document attention on the jnp paths AND the fused kernels, and
+    the cache is paged by sequence index so packed documents never collide
+    slots (module docstring).
+    q_seg: (B, S) explicit segment ids; None derives them from q_pos
+    (segment_ids_from_positions).  Decode MUST receive explicit segments
+    when a row holds more than one document: derived ordinals from a (B, L)
+    decode query stream cannot align with the cache's numbering.
+    seg_base: (B,) int32 added to the (explicit or derived) segment ids —
+    lets a prefill chunk continue a partially-used cache row's numbering.
     implicit_layout: static hint that q_pos is the plain broadcast
     arange(S).  Purely a fast path, NOT a correctness gate (explicit
     positions run fused regardless): it keeps the kernel on the free
@@ -216,6 +233,20 @@ def attention(
     g = n_heads // n_kv_heads
     dtype = x.dtype
     cross = memory is not None
+
+    # Segment ids for the query stream: explicit > derived-from-positions >
+    # None (implicit arange / cross-attention — identically zero segments).
+    # seg_base shifts them into the cache row's global numbering.
+    if cross:
+        seg_q = None  # cross-attention memory carries no packing structure
+    elif q_seg is not None:
+        seg_q = jnp.asarray(q_seg, jnp.int32)
+    elif implicit_layout:
+        seg_q = None
+    else:
+        seg_q = segment_ids_from_positions(q_pos)
+    if seg_q is not None and seg_base is not None:
+        seg_q = seg_q + jnp.asarray(seg_base, jnp.int32)[:, None]
 
     q = _split_heads(x @ p["wq"].astype(dtype), n_heads)  # (B,S,H,D)
     if cross:
@@ -244,31 +275,43 @@ def attention(
             k_pos = q_pos
             new_cache = None
         else:
-            c = cache_len if mode == "prefill" else cache["k"].shape[1]
-            if mode == "prefill":
+            fresh_cache = mode == "prefill" and cache is None
+            c = cache_len if fresh_cache else cache["k"].shape[1]
+            if fresh_cache:
                 ck = jnp.zeros((b, c, n_kv_heads, head_dim), dtype)
                 cv = jnp.zeros((b, c, n_kv_heads, head_dim), dtype)
                 ckpos = jnp.full((b, c), -1, jnp.int32)
+                ckseg = jnp.full((b, c), -1, jnp.int32)
+                cfill = jnp.zeros((b,), jnp.int32)
             else:
                 ck, cv, ckpos = cache["k"], cache["v"], cache["kpos"]
-            # slot: ring buffer when window-limited cache, else absolute position.
-            # At prefill only the last <=c tokens can live in the ring; slice them
+                ckseg, cfill = cache["kseg"], cache["fill"]
+            # segment ids stored alongside the keys: pads keep -1 (they are
+            # dropped below anyway)
+            seg_in = seg_q if seg_q is not None else jnp.zeros_like(q_pos)
+            # PAGED SLOTTING: a token's slot is its ARRIVAL index (the row's
+            # fill cursor + its rank among this call's valid tokens), mod c —
+            # NOT its position, which repeats across the documents of a
+            # packed row and would collide slots.  Only the last <=c tokens
+            # of an over-long prefill can survive the ring; slice them
             # statically so the scatter has no duplicate indices.
             if mode == "prefill" and s > c:
-                k_in, v_in, pos_in = k[:, -c:], v[:, -c:], q_pos[:, -c:]
+                k_in, v_in = k[:, -c:], v[:, -c:]
+                pos_in, seg_w = q_pos[:, -c:], seg_in[:, -c:]
             else:
-                k_in, v_in, pos_in = k, v, q_pos
-            # pads (pos < 0) must NOT scatter: jnp's (-1) % c == c - 1 would
-            # evict the real entry in the last ring slot — route them out of
-            # bounds and drop the write.  (Packed MULTI-document rows remain
-            # unsupported here: duplicate per-document positions collide
-            # slots — see the docstring + ROADMAP.)
-            slot = jnp.where(pos_in >= 0, pos_in % c, c)
+                k_in, v_in, pos_in, seg_w = k, v, q_pos, seg_in
+            # pads (pos < 0) must NOT scatter or advance the cursor: route
+            # them out of bounds and drop the write.
+            valid = pos_in >= 0
+            arrival = jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
+            slot = jnp.where(valid, (cfill[:, None] + arrival) % c, c)
             bidx = jnp.arange(b)[:, None]
             ck = ck.at[bidx, slot].set(k_in, mode="drop")
             cv = cv.at[bidx, slot].set(v_in, mode="drop")
             ckpos = ckpos.at[bidx, slot].set(pos_in, mode="drop")
-            new_cache = {"k": ck, "v": cv, "kpos": ckpos}
+            ckseg = ckseg.at[bidx, slot].set(seg_w, mode="drop")
+            cfill = cfill + jnp.sum(valid, axis=1, dtype=jnp.int32)
+            new_cache = {"k": ck, "v": cv, "kpos": ckpos, "kseg": ckseg, "fill": cfill}
             if mode == "decode":
                 k, v, k_pos = ck, cv, ckpos
             else:
@@ -276,15 +319,19 @@ def attention(
 
     qh = q.reshape(b, s, n_kv_heads, g, head_dim)
     naive_elems = s * k.shape[1]
-    # self-attention train/prefill attends the fresh sequence against itself
-    # (k_pos is q_pos): derive the segment ids ONCE here and share them with
-    # whichever path runs, so packed rows mask identically everywhere.
-    # Decode (ring-buffer cache) and cross-attention keep seg=None — their kv
-    # positions are cache-/memory-explicit and carry no packing structure —
-    # and so does the implicit arange layout (segments identically zero).
+    # k-side segments: self train/prefill attend the fresh sequence against
+    # itself (k side shares seg_q); decode gates against the cache's stored
+    # kseg; cross-attention memory has no segments.  seg_q/seg_k are
+    # both-None or both-arrays, matching the _mask contract.
+    if cross:
+        seg_k = None
+    elif mode == "decode":
+        if seg_q is None:  # implicit-layout decode: single segment 0
+            seg_q = jnp.zeros_like(q_pos)
+        seg_k = new_cache["kseg"]
+    else:
+        seg_k = seg_q
     self_fresh = not cross and mode in ("train", "prefill")
-    derive_segs = self_fresh and not implicit_layout
-    q_seg = k_seg = segment_ids_from_positions(q_pos) if derive_segs else None
     if bk.fused("attention") and self_fresh and k.shape[1] == s:
         # Fused path for train AND prefill: the kernel carries a custom VJP
         # (fused dq and dk/dv Pallas kernels), so the training forward and
@@ -299,14 +346,22 @@ def attention(
                                        backend=bk)
         else:
             out = kops.flash_attention(
-                qh, k, v, q_pos, k_pos, q_seg=q_seg, k_seg=k_seg,
+                qh, k, v, q_pos, k_pos, q_seg=seg_q, k_seg=seg_k,
                 causal=causal, window=window, backend=bk,
             )
+    elif bk.fused("attention") and not cross and mode == "decode":
+        # Fused decode: forward-only flash kernel over the paged cache with
+        # fully explicit positions/segments on both sides (Sq = lanes,
+        # Skv = cache_len).  Closes the "decode stays on jnp" gap.
+        from repro.kernels import ops as kops
+
+        out = kops.flash_decode(qh, k, v, q_pos, k_pos, seg_q, seg_k,
+                                causal=causal, window=window, backend=bk)
     elif attn_chunk and naive_elems > attn_chunk * attn_chunk * 4:
         out = _chunked_sdpa(qh, k, v, q_pos, k_pos, causal, window, attn_chunk,
-                            attn_chunk, q_seg=q_seg, k_seg=k_seg)
+                            attn_chunk, q_seg=seg_q, k_seg=seg_k)
     else:
-        mask = _mask(q_pos, k_pos, causal, window, q_seg, k_seg)
+        mask = _mask(q_pos, k_pos, causal, window, seg_q, seg_k)
         out = _sdpa(qh, k, v, mask)  # (B,Sq,K,G,D)
     out = _merge_heads(out.reshape(b, s, n_heads, head_dim))
     return out @ p["wo"].astype(dtype), new_cache
@@ -318,4 +373,6 @@ def self_cache_shape(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
         "k": jax.ShapeDtypeStruct((batch, cache_len, n_kv_heads, head_dim), dtype),
         "v": jax.ShapeDtypeStruct((batch, cache_len, n_kv_heads, head_dim), dtype),
         "kpos": jax.ShapeDtypeStruct((batch, cache_len), jnp.int32),
+        "kseg": jax.ShapeDtypeStruct((batch, cache_len), jnp.int32),
+        "fill": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }

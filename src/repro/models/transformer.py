@@ -97,6 +97,8 @@ def _block_apply(
     cache_len: int,
     causal: bool,
     implicit_layout: bool,
+    q_seg: Optional[jnp.ndarray] = None,
+    seg_base: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict], Dict]:
     aux = _aux_zero()
     new_cache: Optional[Dict] = None
@@ -110,6 +112,8 @@ def _block_apply(
         attn_chunk=pcfg.attn_chunk,
         backend=resolve_backend(pcfg),
         implicit_layout=implicit_layout,
+        q_seg=q_seg,
+        seg_base=seg_base,
     )
     if kind in ("attn", "swa", "local", "xattn"):
         window = cfg.sliding_window if kind in ("swa", "local") else 0
@@ -247,9 +251,17 @@ def forward(
     mode: str = "train",
     cache: Optional[Dict] = None,
     positions: Optional[jnp.ndarray] = None,
+    segments: Optional[jnp.ndarray] = None,
+    seg_base: Optional[jnp.ndarray] = None,
     cache_len: int = 0,
     last_only: bool = False,
+    gather_idx: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Dict, Optional[Dict]]:
+    """segments: (B, S) explicit segment ids (None = derive from positions);
+    seg_base: (B,) offset into a cache row's segment numbering; gather_idx:
+    (B, L) per-row token indices to unembed (serving: each packed document's
+    last token) — overrides last_only.  A cache passed with mode="prefill"
+    is APPENDED to (paged scatter) instead of rebuilt."""
     pattern = cfg.block_pattern
     n_groups, tail = cfg.n_groups(), cfg.tail_kinds()
     dtype = jnp.dtype(pcfg.compute_dtype)
@@ -283,8 +295,10 @@ def forward(
             q_pos=q_pos, memory=memory, cache=blk_cache, mode=mode,
             cache_len=cache_len, causal=cfg.causal,
             implicit_layout=implicit_layout,
+            q_seg=segments, seg_base=seg_base,
         )
 
+    use_cache_in = cache is not None and mode in ("decode", "prefill")
     group_caches = None
     if n_groups > 0:
         gparams = params["groups"]
@@ -304,7 +318,7 @@ def forward(
 
             if pcfg.remat and mode == "train":
                 group_fn = jax.checkpoint(group_fn)
-            gcache_in = cache["groups"] if (cache is not None and mode == "decode") else None
+            gcache_in = cache["groups"] if use_cache_in else None
             if gcache_in is None:
                 (x, aux_total), group_caches = jax.lax.scan(
                     lambda c, gp: group_fn(c, (gp, None)), (x, aux_total), gparams
@@ -318,11 +332,7 @@ def forward(
             for gi, gp in enumerate(gparams):
                 new_gc = {}
                 for i, kind in enumerate(pattern):
-                    blk_c = (
-                        cache["groups"][gi].get(f"pos{i}")
-                        if (cache is not None and mode == "decode")
-                        else None
-                    )
+                    blk_c = cache["groups"][gi].get(f"pos{i}") if use_cache_in else None
                     x, nc, a = apply_one(kind, gp[f"pos{i}"], x, blk_c)
                     aux_total = {k_: aux_total[k_] + a[k_] for k_ in aux_total}
                     new_gc[f"pos{i}"] = nc
@@ -330,12 +340,16 @@ def forward(
 
     tail_caches = []
     for ti, kind in enumerate(tail):
-        blk_c = cache["tail"][ti] if (cache is not None and mode == "decode") else None
+        blk_c = cache["tail"][ti] if use_cache_in else None
         x, nc, a = apply_one(kind, params["tail"][ti], x, blk_c)
         aux_total = {k_: aux_total[k_] + a[k_] for k_ in aux_total}
         tail_caches.append(nc)
 
-    if last_only:
+    if gather_idx is not None:
+        # serving prefill over a packed chunk: unembed each document's own
+        # last token (one index per lane), not the row's last position
+        x = jnp.take_along_axis(x, gather_idx.astype(jnp.int32)[:, :, None], axis=1)
+    elif last_only:
         x = x[:, -1:]  # serving prefill: unembed only the last position
     x = apply_norm(params["final_norm"], x, cfg.norm)
     if cfg.tie_embeddings:
@@ -355,19 +369,35 @@ def forward(
     return logits, aux_total, out_cache
 
 
-def prefill(cfg, pcfg, params, tokens, *, extra=None, cache_len: int):
-    """Returns (last-position logits (B,1,V), cache)."""
+def prefill(cfg, pcfg, params, tokens, *, extra=None, cache_len: int, cache=None,
+            positions=None, segments=None, seg_base=None, gather_idx=None):
+    """Returns (logits, cache): logits are (B,1,V) last-position by default, or
+    (B,L,V) at gather_idx (B,L) when given.  Passing an existing ``cache``
+    appends this chunk into it (continuous batching) instead of building a
+    fresh one."""
     logits, _aux, cache = forward(
         cfg, pcfg, params, tokens, extra=extra, mode="prefill", cache_len=cache_len,
-        last_only=True,
+        cache=cache, positions=positions, segments=segments, seg_base=seg_base,
+        last_only=True, gather_idx=gather_idx,
     )
     return logits, cache
 
 
-def decode_step(cfg, pcfg, params, cache, token, positions):
-    """token: (B,1) int32; positions: (B,) int32 absolute position of `token`."""
+def decode_step(cfg, pcfg, params, cache, token, positions, segments=None):
+    """token: (B, L) int32 (L lock-step lanes; classic decode is L=1);
+    positions: (B,) or (B, L) int32 absolute position of each token, -1 for
+    idle lanes; segments: optional (B,)/(B, L) row-global segment ids gating
+    each lane to its own document in the shared cache row (None = segment 0,
+    correct only for single-document rows)."""
+    if token.ndim == 1:
+        token = token[:, None]
+    pos = positions if positions.ndim == 2 else positions[:, None]
+    seg = None
+    if segments is not None:
+        seg = segments if segments.ndim == 2 else segments[:, None]
     logits, _aux, cache = forward(
-        cfg, pcfg, params, token, mode="decode", cache=cache, positions=positions[:, None]
+        cfg, pcfg, params, token, mode="decode", cache=cache, positions=pos,
+        segments=seg,
     )
     return logits, cache
 

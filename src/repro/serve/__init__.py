@@ -1,1 +1,6 @@
-from repro.serve.engine import Engine, GenerationResult  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    ContinuousEngine,
+    Engine,
+    GenerationResult,
+    RequestResult,
+)

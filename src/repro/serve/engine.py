@@ -1,13 +1,35 @@
-"""Batched serving engine: prefill + greedy/temperature decode over KV or
-recurrent-state caches.
+"""Serving engines over the paged, segment-aware KV cache.
 
-Slot-based batching: a fixed batch of request slots decodes in lock-step
-(one jitted decode_step per token); finished requests stop contributing via
-an EOS mask while their slots keep shape stability.  This is the serving
-counterpart exercised by the decode dry-run shapes.
+Two layers:
+
+  Engine            — the classic fixed-batch API: one prefill, lock-step
+                      decode, every request enters and leaves together.
+                      Ragged right-padded prompts are supported via
+                      ``prompt_lens`` (each row decodes at its true
+                      position); finished rows freeze to ``eos_id`` /
+                      logprob 0 instead of emitting live samples.
+  ContinuousEngine  — continuous batching: a fixed grid of ``rows x lanes``
+                      request slots over one shared cache.  Requests are
+                      admitted mid-flight by packing their prompts into a
+                      (rows, chunk) batch that runs the SAME packed
+                      train-path prefill kernels (documents separated by
+                      position restarts + segment ids), and decode runs all
+                      live lanes of all rows as ONE (rows, lanes) step.
+                      Each request is gated to its own segment in its cache
+                      row, so several in-flight documents share a row
+                      without seeing each other — the serving counterpart
+                      of the paper's packed large-batch training layout.
+
+Cache-row lifecycle (ContinuousEngine): a request reserves
+``len(prompt) + max_new_tokens`` slots in its row at admission; slots are
+reclaimed row-at-a-time — when the last live request of a row finishes, the
+row is cleared (kpos/kseg -> -1, fill -> 0) and its segment numbering
+restarts.  Per-document slot reclamation inside a live row is future work
+(needs block-granular paging, not a ring).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -18,12 +40,29 @@ import numpy as np
 from repro.configs.base import Config
 from repro.models import decode_step, prefill
 
+_PAGEABLE_KINDS = ("attn", "swa", "local")
+
 
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray  # (B, steps)
     logprobs: np.ndarray  # (B, steps)
     steps: int
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray  # (n,)
+    logprobs: np.ndarray  # (n,)
+    canceled: bool = False
+
+
+def _log_softmax(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.float32)
+    m = x.max(axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return x - m - np.log(e.sum(axis=-1, keepdims=True))
 
 
 class Engine:
@@ -37,10 +76,17 @@ class Engine:
         def _prefill(params, tokens, extra):
             return prefill(m, p, params, tokens, extra=extra, cache_len=self.cache_len)
 
+        def _prefill_ragged(params, tokens, positions, gidx, extra):
+            return prefill(
+                m, p, params, tokens, extra=extra, cache_len=self.cache_len,
+                positions=positions, gather_idx=gidx,
+            )
+
         def _decode(params, cache, tok, pos):
             return decode_step(m, p, params, cache, tok, pos)
 
         self._prefill = jax.jit(_prefill, static_argnames=())
+        self._prefill_ragged = jax.jit(_prefill_ragged)
         self._decode = jax.jit(_decode, donate_argnums=(1,))
 
     def generate(
@@ -50,19 +96,43 @@ class Engine:
         temperature: float = 0.0,
         key: Optional[jax.Array] = None,
         extra: Optional[Dict] = None,
+        prompt_lens: Optional[np.ndarray] = None,
     ) -> GenerationResult:
+        """prompt_lens: optional (B,) int per-row true prompt lengths for
+        right-padded ragged prompts — each row prefills only its real tokens
+        (pads get position -1 and never enter the cache) and decodes at its
+        own position, instead of every row pretending its prompt is S long."""
         b, s = prompts.shape
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts, jnp.int32), extra)
-        pos = jnp.full((b,), s, jnp.int32)
+        toks_in = jnp.asarray(prompts, jnp.int32)
+        if prompt_lens is None:
+            logits, cache = self._prefill(self.params, toks_in, extra)
+            pos = jnp.full((b,), s, jnp.int32)
+        else:
+            lens = np.asarray(prompt_lens, np.int32)
+            if lens.shape != (b,) or lens.min() < 1 or lens.max() > s:
+                raise ValueError(f"prompt_lens must be (B,) in [1, {s}], got {lens!r}")
+            ar = np.arange(s, dtype=np.int32)[None, :]
+            positions = np.where(ar < lens[:, None], ar, -1).astype(np.int32)
+            gidx = (lens - 1)[:, None].astype(np.int32)
+            logits, cache = self._prefill_ragged(
+                self.params, toks_in, jnp.asarray(positions), jnp.asarray(gidx), extra
+            )
+            pos = jnp.asarray(lens)
         tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         done = jnp.zeros((b,), bool)
         outs: List[np.ndarray] = []
         lps: List[np.ndarray] = []
         key = key if key is not None else jax.random.PRNGKey(0)
         for i in range(max_new_tokens):
-            outs.append(np.asarray(tok[:, 0]))
+            # rows already finished BEFORE this step freeze to eos_id /
+            # logprob 0 — the first EOS itself is emitted with its true
+            # logprob, everything after it is padding, not live samples
+            frozen = done
+            emit = jnp.where(frozen, jnp.int32(self.eos_id), tok[:, 0])
+            outs.append(np.asarray(emit))
             lp = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32), axis=-1)
-            lps.append(np.asarray(jnp.take_along_axis(lp, tok, axis=-1)[:, 0]))
+            lp_tok = jnp.take_along_axis(lp, tok, axis=-1)[:, 0]
+            lps.append(np.asarray(jnp.where(frozen, 0.0, lp_tok)))
             done = done | (tok[:, 0] == self.eos_id)
             if bool(done.all()):
                 break
@@ -74,6 +144,284 @@ class Engine:
                 tok = nxt[:, None].astype(jnp.int32)
             else:
                 tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        return GenerationResult(
-            tokens=np.stack(outs, axis=1), logprobs=np.stack(lps, axis=1), steps=len(outs)
+        if outs:
+            t_out, l_out = np.stack(outs, axis=1), np.stack(lps, axis=1)
+        else:  # max_new_tokens == 0: empty, correctly (B, 0)-shaped
+            t_out = np.zeros((b, 0), np.int32)
+            l_out = np.zeros((b, 0), np.float32)
+        return GenerationResult(tokens=t_out, logprobs=l_out, steps=len(outs))
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    temperature: float
+    row: int = -1
+    lane: int = -1
+    seg: int = -1
+    offset: int = -1  # prompt offset inside this step's prefill chunk
+    next_pos: int = 0  # position of the next token fed to decode
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    logprobs: List[float] = dataclasses.field(default_factory=list)
+    done: bool = False
+    canceled: bool = False
+
+
+class ContinuousEngine:
+    """Continuous batching over a (rows x lanes) grid of request slots.
+
+    rows:      cache batch dimension (one paged cache row each).
+    lanes:     decode slots per row — that many requests can decode
+               lock-step against one shared cache row, each gated to its
+               own segment.
+    cache_len: KV slots per row; a request needs len(prompt) + max_new.
+    chunk:     prefill chunk width — admitted prompts are packed into a
+               (rows, chunk) batch per step; a prompt must fit in one chunk.
+
+    Restricted to pure-attention block patterns (attn/swa/local): recurrent
+    and xLSTM states are not segment-pageable, and cross-attention needs
+    per-request memory.
+    """
+
+    def __init__(self, cfg: Config, params, *, rows: int = 2, lanes: int = 2,
+                 cache_len: int = 0, chunk: int = 0, eos_id: int = -1, seed: int = 0):
+        bad = [k for k in tuple(cfg.model.block_pattern) + tuple(cfg.model.tail_kinds())
+               if k not in _PAGEABLE_KINDS]
+        if bad:
+            raise NotImplementedError(
+                f"ContinuousEngine needs a pure-attention pattern {_PAGEABLE_KINDS}, "
+                f"got {bad!r} — recurrent/xLSTM state is not segment-pageable"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.rows = rows
+        self.lanes = lanes
+        self.cache_len = cache_len or (cfg.seq_len + 64)
+        self.chunk = chunk or cfg.seq_len
+        self.eos_id = eos_id
+        self._rng = np.random.default_rng(seed)
+        m, p = cfg.model, cfg.parallel
+
+        def _prefill_fn(params, tokens, positions, seg_base, cache, gidx):
+            return prefill(
+                m, p, params, tokens, cache_len=self.cache_len, cache=cache,
+                positions=positions, seg_base=seg_base, gather_idx=gidx,
+            )
+
+        def _decode_fn(params, cache, tok, pos, seg):
+            return decode_step(m, p, params, cache, tok, pos, segments=seg)
+
+        def _init_fn(params):
+            # an all-pad prefill builds an EMPTY cache: every position is -1,
+            # so nothing scatters — kpos/kseg stay -1, fill stays 0
+            t0 = jnp.zeros((rows, 1), jnp.int32)
+            p0 = jnp.full((rows, 1), -1, jnp.int32)
+            return prefill(m, p, params, t0, cache_len=self.cache_len, positions=p0)[1]
+
+        def _clear_fn(cache, mask):
+            # reset the masked rows to the empty-cache state; leaf roles are
+            # identified by name, broadcasting the row mask from the right
+            # so scanned group stacking (leading n_groups axis) is untouched
+            def one(path, x):
+                name = getattr(path[-1], "key", None)
+                if name in ("kpos", "kseg"):
+                    return jnp.where(mask[:, None], jnp.int32(-1), x)
+                if name == "fill":
+                    return jnp.where(mask, jnp.int32(0), x)
+                if name in ("k", "v"):
+                    return jnp.where(mask[:, None, None, None], jnp.zeros((), x.dtype), x)
+                return x
+
+            return jax.tree_util.tree_map_with_path(one, cache)
+
+        self._prefill = jax.jit(_prefill_fn)
+        self._decode = jax.jit(_decode_fn)
+        self._clear = jax.jit(_clear_fn)
+        self.cache = jax.jit(_init_fn)(params)
+
+        self._next_rid = 0
+        self._reqs: Dict[int, _Request] = {}
+        self._queue: collections.deque = collections.deque()
+        self._active: set = set()
+        self._finished_this_step: List[int] = []
+        self._row_live: List[set] = [set() for _ in range(rows)]
+        self._free_lanes: List[set] = [set(range(lanes)) for _ in range(rows)]
+        self._row_reserved: List[int] = [0] * rows
+        self._row_next_seg: List[int] = [0] * rows
+
+    # -- request API --------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int, temperature: float = 0.0) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.chunk:
+            raise ValueError(f"prompt ({len(prompt)}) exceeds prefill chunk ({self.chunk})")
+        if len(prompt) + max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"prompt + max_new_tokens ({len(prompt)} + {max_new_tokens}) "
+                f"exceeds cache_len ({self.cache_len})"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self._reqs[rid] = _Request(rid, prompt, max_new_tokens, temperature)
+        self._queue.append(rid)
+        return rid
+
+    def cancel(self, rid: int) -> None:
+        """Evict a request mid-flight: queued -> dropped, active -> its lane
+        frees next step (emitted tokens so far are kept in the result)."""
+        r = self._reqs[rid]
+        r.canceled = True
+        if rid in self._queue:
+            self._queue.remove(rid)
+            r.done = True
+        elif not r.done:
+            self._finish(r)
+
+    def result(self, rid: int) -> RequestResult:
+        r = self._reqs[rid]
+        return RequestResult(
+            rid=rid,
+            tokens=np.asarray(r.tokens, np.int32),
+            logprobs=np.asarray(r.logprobs, np.float32),
+            canceled=r.canceled,
         )
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        return len(self._active)
+
+    # -- internals ----------------------------------------------------------
+
+    def _finish(self, r: _Request) -> None:
+        r.done = True
+        self._active.discard(r.rid)
+        self._row_live[r.row].discard(r.rid)
+        self._free_lanes[r.row].add(r.lane)
+        self._finished_this_step.append(r.rid)
+
+    def _sample(self, r: _Request, logits: np.ndarray) -> None:
+        """Sample from one (V,) logits vector, emit, and update liveness."""
+        lp = _log_softmax(logits)
+        if r.temperature > 0:
+            pz = np.exp(lp / np.float32(r.temperature))
+            pz = pz / pz.sum()
+            tok = int(self._rng.choice(len(pz), p=pz))
+        else:
+            tok = int(np.argmax(logits))
+        r.tokens.append(tok)
+        r.logprobs.append(float(lp[tok]))
+        if tok == self.eos_id or len(r.tokens) >= r.max_new:
+            self._finish(r)
+
+    def _reset_drained_rows(self) -> None:
+        rows = [i for i in range(self.rows)
+                if not self._row_live[i] and self._row_reserved[i] > 0]
+        if not rows:
+            return
+        mask = np.zeros((self.rows,), bool)
+        mask[rows] = True
+        self.cache = self._clear(self.cache, jnp.asarray(mask))
+        for i in rows:
+            self._row_reserved[i] = 0
+            self._row_next_seg[i] = 0
+
+    def _admit(self):
+        """FIFO first-fit: place queued prompts into rows with a free lane,
+        enough reserved capacity, and room in this step's prefill chunk."""
+        admits: List[_Request] = []
+        chunk_used = [0] * self.rows
+        seg_base = list(self._row_next_seg)  # snapshot BEFORE this step's segs
+        for rid in list(self._queue):
+            r = self._reqs[rid]
+            need = len(r.prompt) + r.max_new
+            for row in range(self.rows):
+                if not self._free_lanes[row]:
+                    continue
+                if self._row_reserved[row] + need > self.cache_len:
+                    continue
+                if chunk_used[row] + len(r.prompt) > self.chunk:
+                    continue
+                r.row = row
+                r.lane = min(self._free_lanes[row])
+                self._free_lanes[row].discard(r.lane)
+                r.seg = self._row_next_seg[row]
+                self._row_next_seg[row] += 1
+                r.offset = chunk_used[row]
+                chunk_used[row] += len(r.prompt)
+                self._row_reserved[row] += need
+                self._row_live[row].add(rid)
+                self._active.add(rid)
+                self._queue.remove(rid)
+                admits.append(r)
+                break
+        return admits, np.asarray(seg_base, np.int32)
+
+    def step(self) -> Dict:
+        """One scheduler tick: reclaim drained rows, admit + prefill queued
+        prompts as one packed chunk, then decode every live lane once."""
+        self._finished_this_step = []
+        self._reset_drained_rows()
+
+        admits, seg_base = self._admit()
+        if admits:
+            toks = np.zeros((self.rows, self.chunk), np.int32)
+            poss = np.full((self.rows, self.chunk), -1, np.int32)
+            gidx = np.zeros((self.rows, self.lanes), np.int32)
+            for r in admits:
+                n = len(r.prompt)
+                toks[r.row, r.offset:r.offset + n] = r.prompt
+                poss[r.row, r.offset:r.offset + n] = np.arange(n, dtype=np.int32)
+                gidx[r.row, r.lane] = r.offset + n - 1
+            logits, self.cache = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray(poss),
+                jnp.asarray(seg_base), self.cache, jnp.asarray(gidx),
+            )
+            lg = np.asarray(logits, np.float32)  # (rows, lanes, V)
+            for r in admits:
+                r.next_pos = len(r.prompt)
+                if r.max_new == 0:
+                    self._finish(r)
+                else:
+                    self._sample(r, lg[r.row, r.lane])
+
+        live = [self._reqs[rid] for rid in sorted(self._active)]
+        if live:
+            tok = np.zeros((self.rows, self.lanes), np.int32)
+            pos = np.full((self.rows, self.lanes), -1, np.int32)
+            seg = np.full((self.rows, self.lanes), -1, np.int32)
+            for r in live:
+                tok[r.row, r.lane] = r.tokens[-1]
+                pos[r.row, r.lane] = r.next_pos
+                seg[r.row, r.lane] = r.seg
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(seg),
+            )
+            lg = np.asarray(logits, np.float32)
+            for r in live:
+                r.next_pos += 1
+                self._sample(r, lg[r.row, r.lane])
+
+        return {
+            "admitted": len(admits),
+            "decoded": len(live),
+            "finished": list(self._finished_this_step),
+            "pending": self.pending,
+            "active": self.active,
+        }
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drive step() until every submitted request has finished."""
+        for _ in range(max_steps):
+            if not self._queue and not self._active:
+                return
+            self.step()
+        raise RuntimeError(f"ContinuousEngine.run did not drain in {max_steps} steps")

@@ -115,3 +115,72 @@ def test_flash_attention_block_size_invariance():
     o1 = flash_attention(q, k, v, block_q=64, block_k=64)
     o2 = flash_attention(q, k, v, block_q=128, block_k=32)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def _paged_cache_case(key, b, c, lanes, kvh, d, n_fill):
+    """Random paged cache: n_fill arrival-ordered slots holding 2 interleaved
+    segments per row, rest empty (kpos/kseg = -1); lanes continue segment 0/1."""
+    ks = jax.random.split(key, 5)
+    k = jax.random.normal(ks[0], (b, c, kvh, d))
+    v = jax.random.normal(ks[1], (b, c, kvh, d))
+    k_seg = np.full((b, c), -1, np.int32)
+    k_pos = np.full((b, c), -1, np.int32)
+    counts = np.zeros((b, 2), np.int32)
+    rng = np.random.RandomState(0)
+    for bi in range(b):
+        for s in range(n_fill):
+            seg = int(rng.randint(0, 2))
+            k_seg[bi, s] = seg
+            k_pos[bi, s] = counts[bi, seg]
+            counts[bi, seg] += 1
+    h = kvh * 2
+    q = jax.random.normal(ks[2], (b, lanes, h, d))
+    q_pos = np.stack([counts[:, i % 2] for i in range(lanes)], axis=1).astype(np.int32)
+    q_seg = np.broadcast_to(np.arange(lanes, dtype=np.int32) % 2, (b, lanes)).copy()
+    return q, k, v, jnp.asarray(q_pos), jnp.asarray(k_pos), jnp.asarray(q_seg), jnp.asarray(k_seg)
+
+
+@pytest.mark.parametrize("lanes", [1, 3, 8])
+@pytest.mark.parametrize("window", [0, 5])
+def test_flash_decode_matches_paged_ref(lanes, window):
+    """Fused decode over an arrival-ordered multi-segment cache == the jnp
+    paged oracle, for lane counts below/at the f32 sublane pad (8)."""
+    from repro.kernels.flash_decode import flash_decode
+
+    q, k, v, q_pos, k_pos, q_seg, k_seg = _paged_cache_case(
+        jax.random.PRNGKey(3), b=2, c=48, lanes=lanes, kvh=2, d=32, n_fill=30
+    )
+    out = flash_decode(q, k, v, q_pos, k_pos, q_seg, k_seg, causal=True, window=window)
+    exp = ref.decode_attention_ref(
+        q, k, v, q_pos, k_pos, q_seg, k_seg, causal=True, window=window
+    )
+    assert out.shape == q.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-3, rtol=2e-3)
+
+
+def test_flash_decode_idle_lanes_and_empty_slots_emit_zero():
+    """Idle lanes (q_pos < 0) emit exactly 0; empty cache slots (kpos = -1)
+    never contribute (a cache with extra empty slots matches a tight one)."""
+    from repro.kernels.flash_decode import flash_decode
+
+    q, k, v, q_pos, k_pos, q_seg, k_seg = _paged_cache_case(
+        jax.random.PRNGKey(4), b=1, c=40, lanes=4, kvh=1, d=16, n_fill=24
+    )
+    q_pos = q_pos.at[0, 2].set(-1)  # idle lane
+    q_seg = q_seg.at[0, 2].set(-1)
+    out = flash_decode(q, k, v, q_pos, k_pos, q_seg, k_seg)
+    assert np.all(np.asarray(out[0, 2]) == 0.0)
+    # slots past n_fill are empty: truncating them changes nothing
+    out_tight = flash_decode(
+        q, k[:, :24], v[:, :24], q_pos, k_pos[:, :24], q_seg, k_seg[:, :24]
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_tight), atol=1e-6)
+
+
+def test_flash_decode_requires_explicit_operands():
+    from repro.kernels.flash_decode import flash_decode
+
+    q = jnp.zeros((1, 1, 2, 16))
+    k = v = jnp.zeros((1, 8, 2, 16))
+    with pytest.raises(ValueError, match="required"):
+        flash_decode(q, k, v, None, jnp.zeros((1, 8), jnp.int32), None, None)

@@ -1,15 +1,33 @@
-"""Serving engine: greedy decode == teacher-forced forward argmax chain."""
+"""Serving engines: greedy decode == teacher-forced forward argmax chain,
+EOS/ragged/empty regressions, and the packed-serving differential suite —
+a packed multi-document prompt served through the paged segment-aware cache
+must decode exactly like separate unpacked runs, on the jnp AND fused paths.
+"""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.backend import Backend
 from repro.configs import get_smoke
 from repro.models import forward, init_params
-from repro.serve import Engine
+from repro.serve import ContinuousEngine, Engine
+
+
+def _cfg(arch="internlm2-1.8b", backend=None, dtype=None):
+    cfg = get_smoke(arch)
+    kw = {}
+    if backend is not None:
+        kw["backend"] = backend
+    if dtype is not None:
+        kw["compute_dtype"] = dtype
+    return cfg.replace(parallel=dataclasses.replace(cfg.parallel, **kw)) if kw else cfg
 
 
 def test_greedy_decode_matches_forward_chain():
-    cfg = get_smoke("internlm2-1.8b")
+    cfg = _cfg()
     m, pc = cfg.model, cfg.parallel
     params = init_params(m, jax.random.PRNGKey(0))
     eng = Engine(cfg, params, cache_len=64)
@@ -42,3 +60,215 @@ def test_temperature_sampling_runs():
     r2 = eng.generate(prompts, 8, temperature=1.0, key=jax.random.PRNGKey(2))
     assert r1.tokens.shape == (2, 8)
     assert not np.array_equal(r1.tokens, r2.tokens)  # different keys -> different samples
+
+
+# ---------------------------------------------------------------------------
+# legacy Engine regressions (ISSUE 6 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_finished_rows_freeze_to_eos():
+    """A row that hits EOS keeps emitting eos_id / logprob 0 while other rows
+    run on — not live samples from its dead continuation."""
+    cfg = get_smoke("granite-3-2b")
+    params = init_params(cfg.model, jax.random.PRNGKey(0))
+    prompts = np.random.RandomState(2).randint(0, cfg.model.vocab_size, size=(4, 4))
+    # probe run: pick row 0's third greedy token as the EOS id, so the real
+    # run deterministically finishes row 0 early
+    probe = Engine(cfg, params, cache_len=64).generate(prompts, 8)
+    eos = int(probe.tokens[0, 2])
+    eng = Engine(cfg, params, cache_len=64, eos_id=eos)
+    res = eng.generate(prompts, 8)
+    first = int(np.nonzero(res.tokens[0] == eos)[0][0])
+    assert first <= 2 and res.steps > first + 1
+    after = np.arange(first + 1, res.steps)
+    np.testing.assert_array_equal(res.tokens[0][after], eos)
+    np.testing.assert_array_equal(res.logprobs[0][after], 0.0)
+    # the first EOS itself keeps its true (negative) logprob
+    assert res.logprobs[0][first] < 0.0
+    # unfinished rows are untouched by row 0's freeze
+    for b in range(1, 4):
+        if eos not in probe.tokens[b, : res.steps]:
+            np.testing.assert_array_equal(res.tokens[b], probe.tokens[b, : res.steps])
+
+
+def test_max_new_tokens_zero_returns_empty():
+    cfg = get_smoke("granite-3-2b")
+    params = init_params(cfg.model, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, cache_len=32)
+    prompts = np.random.RandomState(0).randint(0, cfg.model.vocab_size, size=(3, 4))
+    res = eng.generate(prompts, 0)
+    assert res.tokens.shape == (3, 0)
+    assert res.logprobs.shape == (3, 0)
+    assert res.steps == 0
+
+
+def test_ragged_prompts_decode_at_true_positions():
+    """Right-padded ragged prompts with prompt_lens == each prompt run alone
+    at its natural length (the old engine decoded every row at position S)."""
+    cfg = _cfg(dtype="float32")
+    m = cfg.model
+    params = init_params(m, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, cache_len=64)
+    rs = np.random.RandomState(3)
+    lens = np.array([5, 9, 3])
+    s = lens.max()
+    prompts = np.zeros((3, s), np.int64)
+    singles = []
+    for i, ln in enumerate(lens):
+        p = rs.randint(0, m.vocab_size, size=(ln,))
+        prompts[i, :ln] = p
+        singles.append(p)
+    res = eng.generate(prompts, 6, prompt_lens=lens)
+    for i, p in enumerate(singles):
+        ref = eng.generate(p[None], 6)
+        np.testing.assert_array_equal(res.tokens[i], ref.tokens[0], err_msg=f"row {i}")
+        np.testing.assert_allclose(res.logprobs[i], ref.logprobs[0], atol=1e-5)
+
+
+def test_prompt_lens_validation():
+    cfg = get_smoke("granite-3-2b")
+    params = init_params(cfg.model, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, cache_len=32)
+    prompts = np.zeros((2, 4), np.int64)
+    with pytest.raises(ValueError, match="prompt_lens"):
+        eng.generate(prompts, 2, prompt_lens=np.array([4, 5]))  # > S
+
+
+# ---------------------------------------------------------------------------
+# packed-serving differential suite (ISSUE 6 tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", [Backend.all_reference(), Backend.all_fused()],
+                         ids=["jnp", "fused"])
+def test_packed_two_docs_match_unpacked_generate(backend):
+    """Two documents packed into ONE cache row (shared paged cache, segment
+    gating) decode token-for-token like two separate unpacked generate calls,
+    with matching logprobs — on the jnp and fused (flash prefill +
+    flash_decode) paths."""
+    cfg = _cfg(backend=backend, dtype="float32")
+    m = cfg.model
+    params = init_params(m, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(0)
+    p1 = rs.randint(0, m.vocab_size, size=(7,))
+    p2 = rs.randint(0, m.vocab_size, size=(5,))
+
+    eng = Engine(cfg, params, cache_len=32)
+    ref1 = eng.generate(p1[None], 6)
+    ref2 = eng.generate(p2[None], 6)
+
+    ce = ContinuousEngine(cfg, params, rows=1, lanes=2, cache_len=32, chunk=16)
+    r1 = ce.submit(p1, 6)
+    r2 = ce.submit(p2, 6)
+    ce.run()
+    got1, got2 = ce.result(r1), ce.result(r2)
+    np.testing.assert_array_equal(got1.tokens, ref1.tokens[0])
+    np.testing.assert_array_equal(got2.tokens, ref2.tokens[0])
+    np.testing.assert_allclose(got1.logprobs, ref1.logprobs[0], atol=1e-5)
+    np.testing.assert_allclose(got2.logprobs, ref2.logprobs[0], atol=1e-5)
+
+
+def test_continuous_admit_midflight_matches_unpacked():
+    """A request admitted while another is mid-decode (staggered prefill into
+    the SAME cache row) still matches its solo run — the late document's
+    slots interleave with the early one's decode appends in arrival order."""
+    cfg = _cfg(dtype="float32")
+    m = cfg.model
+    params = init_params(m, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(1)
+    p1 = rs.randint(0, m.vocab_size, size=(6,))
+    p2 = rs.randint(0, m.vocab_size, size=(4,))
+
+    eng = Engine(cfg, params, cache_len=32)
+    ref1 = eng.generate(p1[None], 5)
+    ref2 = eng.generate(p2[None], 5)
+
+    ce = ContinuousEngine(cfg, params, rows=1, lanes=2, cache_len=32, chunk=8)
+    r1 = ce.submit(p1, 5)
+    ce.step()
+    ce.step()  # r1 decodes alone for two steps
+    r2 = ce.submit(p2, 5)  # admitted mid-flight into the same row
+    ce.run()
+    np.testing.assert_array_equal(ce.result(r1).tokens, ref1.tokens[0])
+    np.testing.assert_array_equal(ce.result(r2).tokens, ref2.tokens[0])
+
+
+def test_continuous_evict_midflight_frees_capacity():
+    """cancel() mid-decode keeps the tokens emitted so far, frees the lane,
+    and a later request reuses the row without seeing the evicted doc."""
+    cfg = _cfg(dtype="float32")
+    m = cfg.model
+    params = init_params(m, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(2)
+    p1 = rs.randint(0, m.vocab_size, size=(5,))
+    p2 = rs.randint(0, m.vocab_size, size=(6,))
+
+    ce = ContinuousEngine(cfg, params, rows=1, lanes=1, cache_len=24, chunk=8)
+    r1 = ce.submit(p1, 12)
+    ce.step()
+    ce.step()
+    ce.cancel(r1)
+    got1 = ce.result(r1)
+    assert got1.canceled and 1 <= len(got1.tokens) < 12
+    # lane freed -> the row drains, resets, and serves the next request
+    r2 = ce.submit(p2, 4)
+    ce.run()
+    eng = Engine(cfg, params, cache_len=24)
+    np.testing.assert_array_equal(ce.result(r2).tokens, eng.generate(p2[None], 4).tokens[0])
+
+
+def test_continuous_row_reuse_after_drain():
+    """Sequential waves through one row: the row resets (fresh segments,
+    empty slots) between waves, so wave 2 matches solo runs bitwise."""
+    cfg = _cfg(dtype="float32")
+    m = cfg.model
+    params = init_params(m, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(4)
+    prompts = [rs.randint(0, m.vocab_size, size=(n,)) for n in (5, 4, 6, 3)]
+    eng = Engine(cfg, params, cache_len=32)
+    refs = [eng.generate(p[None], 4).tokens[0] for p in prompts]
+
+    ce = ContinuousEngine(cfg, params, rows=1, lanes=2, cache_len=32, chunk=16)
+    rids = [ce.submit(p, 4) for p in prompts[:2]]
+    ce.run()
+    rids += [ce.submit(p, 4) for p in prompts[2:]]
+    ce.run()
+    for rid, want in zip(rids, refs):
+        np.testing.assert_array_equal(ce.result(rid).tokens, want)
+
+
+def test_continuous_multi_row_scheduling():
+    """More requests than lanes: the scheduler queues the overflow and every
+    request still matches its solo run once capacity frees up."""
+    cfg = _cfg(dtype="float32")
+    m = cfg.model
+    params = init_params(m, jax.random.PRNGKey(0))
+    rs = np.random.RandomState(5)
+    prompts = [rs.randint(0, m.vocab_size, size=(rs.randint(3, 8),)) for _ in range(5)]
+    eng = Engine(cfg, params, cache_len=32)
+    refs = [eng.generate(p[None], 4).tokens[0] for p in prompts]
+
+    ce = ContinuousEngine(cfg, params, rows=2, lanes=1, cache_len=32, chunk=8)
+    rids = [ce.submit(p, 4) for p in prompts]
+    assert ce.pending > 0 or ce.active > 0
+    ce.run()
+    for rid, want in zip(rids, refs):
+        np.testing.assert_array_equal(ce.result(rid).tokens, want)
+
+
+def test_continuous_engine_rejects_unpageable_patterns():
+    cfg = get_smoke("recurrentgemma-9b")
+    params = None  # init never reached
+    with pytest.raises(NotImplementedError, match="segment-pageable"):
+        ContinuousEngine(cfg, params, rows=1, lanes=1, cache_len=16, chunk=8)
+
+
+def test_continuous_capacity_validation():
+    cfg = _cfg()
+    params = init_params(cfg.model, jax.random.PRNGKey(0))
+    ce = ContinuousEngine(cfg, params, rows=1, lanes=1, cache_len=16, chunk=8)
+    with pytest.raises(ValueError, match="chunk"):
+        ce.submit(np.zeros(9, np.int32), 2)
+    with pytest.raises(ValueError, match="cache_len"):
+        ce.submit(np.zeros(8, np.int32), 12)

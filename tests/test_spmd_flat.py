@@ -6,7 +6,7 @@ Needs >1 device, so the checks run in subprocesses with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main test process
 must keep seeing 1 device), mirroring tests/test_distributed.py.
 
-Assertions (ISSUE 5 acceptance):
+Assertions (ISSUE 5 acceptance, remainder coverage from ISSUE 6):
   * differential vs the gathered oracle — BITWISE when no leaf straddles a
     shard boundary (zero partials from other shards add exactly; VR-LARS is
     within 1 ulp because its trust*||w|| epilogue multiply may fuse
@@ -15,8 +15,11 @@ Assertions (ISSUE 5 acceptance):
     apply; the trust-ratio epilogue is jnp), sharded scan stats stay 2
     (accum + finalize), and the end-to-end sharded fused train step is 8
     (4 attention + 2 stats + 2 update) vs the gathered 7;
-  * supports() falls back to the gathered single-launch path when the block
-    count doesn't divide across the shards.
+  * block counts that do NOT divide the shard count no longer fall back to
+    the gathered path: FlatSpmd pads the rows dimension with zero blocks
+    internally (exact-zero psum contributions), so supports() is True and
+    the update still runs as 2 per-shard launches, allclose vs gathered —
+    including the 195-block smoke model on an 8-device mesh end to end.
 """
 import os
 import subprocess
@@ -86,14 +89,11 @@ for name in got:
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 print("aligned bitwise ok")
 
-# --- hostile layout (ragged leaves straddling shard boundaries), padded to a
-# shard-divisible block count: the per-leaf scalar psum reassociates one add
-# per straddle, so tight allclose instead of bitwise
+# --- hostile layout (ragged leaves straddling shard boundaries, block count
+# NOT divisible by 8 — the internal zero-block padding covers the remainder):
+# the per-leaf scalar psum reassociates one add per straddle, so tight
+# allclose instead of bitwise
 params = oracle.hostile_params()
-l0 = ParamLayout.for_tree(params)
-pad = (-l0.n_blocks) % 8
-if pad:
-    params = dict(params, _pad=jnp.ones(pad * l0.block_rows * 128) * 0.3)
 assert plan.supports(ParamLayout.for_tree(params))
 got = updates(params, plan)
 want = updates(params, None)
@@ -103,13 +103,20 @@ for name in got:
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-6, atol=1e-8)
 print("hostile allclose ok")
 
-# --- non-divisible layout: supports() is False and the gathered
-# single-launch path keeps serving (update stays ONE pallas_call)
-bad = {"w": jnp.ones((64 * 9, 128))}  # 9 blocks % 8 != 0
-assert not plan.supports(ParamLayout.for_tree(bad))
+# --- non-divisible layout runs SHARDED now (remainder rows padded with zero
+# blocks inside FlatSpmd): still the 2-launch per-shard pipeline, allclose
+# vs gathered (the single leaf straddles every shard boundary)
+bad = {"w": jnp.linspace(-1.0, 1.0, 64 * 9 * 128).reshape(64 * 9, 128)}  # 9 blocks % 8 != 0
+assert plan.supports(ParamLayout.for_tree(bad))
 got = updates(bad, plan)
-assert all(n == 1 for _, n in got.values()), got
-print("fallback ok")
+want = updates(bad, None)
+for name in got:
+    u_s, n_s = got[name]; u_g, n_g = want[name]
+    assert n_g == 1, (name, n_g)
+    assert n_s == 2, (name, n_s)  # remainder path is NOT a gathered fallback
+    for a, b in zip(jax.tree_util.tree_leaves(u_s), jax.tree_util.tree_leaves(u_g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-6, atol=1e-8)
+print("remainder sharded ok")
 
 # --- sharded stats sweeps, kernel level: identical inputs in, BITWISE out
 # (element-wise kernels on local row slices, no collective)
@@ -178,16 +185,17 @@ from repro.launch.mesh import compat_make_mesh
 from repro.sharding.rules import Rules, activate
 from repro.train import init_state, make_loss_fn, make_train_step
 
-# the smoke transformer packs to 195 blocks: a (5,)-device data mesh divides
-# it, so the END-TO-END fused train step runs its stats and update per-shard
-mesh = compat_make_mesh((5,), ("data",))
-cfg = get_smoke("granite-3-2b").replace(global_batch=10, seq_len=16)
+# the smoke transformer packs to 195 blocks — NOT divisible by this 8-device
+# mesh, so the END-TO-END fused train step exercises the remainder-padding
+# path for its per-shard stats and update (the ISSUE 6 carry-over case)
+mesh = compat_make_mesh((8,), ("data",))
+cfg = get_smoke("granite-3-2b").replace(global_batch=16, seq_len=16)
 cfg = cfg.replace(
-    optimizer=dataclasses.replace(cfg.optimizer, name="vr_lamb", k=5),
+    optimizer=dataclasses.replace(cfg.optimizer, name="vr_lamb", k=4),
     parallel=dataclasses.replace(
         cfg.parallel, backend=Backend.all_fused(), compute_dtype="float32"),
 )
-batch = next(iter(lm_batches(cfg.model.vocab_size, 10, 16, seed=0)))
+batch = next(iter(lm_batches(cfg.model.vocab_size, 16, 16, seed=0)))
 state = init_state(cfg)
 plan = Backend.all_fused().shard(mesh, Rules(mesh=mesh))
 assert plan.supports(state.opt_state["m"].layout)
@@ -213,13 +221,15 @@ print("OK")
 def test_spmd_flat_ops_match_gathered_oracle_subprocess():
     """Sharded optimizer updates / stats sweeps vs the gathered single-launch
     oracle on an 8-device CPU mesh: bitwise on leaf-aligned layouts, tight
-    allclose on straddling ones, launch counts pinned, graceful fallback."""
+    allclose on straddling ones (including non-divisible block counts via
+    the internal remainder padding), launch counts pinned."""
     _run(OPS_SCRIPT)
 
 
 @pytest.mark.slow
 def test_spmd_full_train_step_subprocess():
     """make_train_step(mesh=...) under a fused plan runs the flat stats and
-    update per-shard end to end on the smoke transformer (5-device mesh
-    dividing its 195 blocks), matching the unsharded step."""
+    update per-shard end to end on the smoke transformer — 195 blocks on an
+    8-device mesh, so every sharded launch takes the remainder-padding path —
+    matching the unsharded step."""
     _run(TRAINER_SCRIPT)
