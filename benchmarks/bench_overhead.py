@@ -16,10 +16,18 @@ win on the update math.
      machine-readable to BENCH_flat_state.json so the perf trajectory is
      tracked across PRs.
 
+  e) structural cost model (benchmarks/cost_model.py): per-step block
+     visits, HBM bytes, and MXU FLOPs counted by replaying the kernels'
+     real grid specs and index maps, with the superseded geometries
+     (split backward, identity fetch, phase-blind updates) as baselines —
+     hardware-independent, and gated on the claimed reductions.
+
 Every machine-readable record carries the fully-resolved backend ``plan``
-(Backend.describe(): per-subsystem fused/reference + interpret + platform),
-and merging records with disagreeing plans is refused (benchmarks/common.py)
-— TPU fused numbers can never silently mix with CPU-interpret ones.
+(Backend.describe(): per-subsystem fused/reference + interpret + platform)
+and its measurement ``config``; merging records with disagreeing plans or
+key-wise conflicting configs is refused (benchmarks/common.py) — TPU fused
+numbers can never silently mix with CPU-interpret ones, nor an S=256 sweep
+with an S=512 cost record.
 """
 from __future__ import annotations
 
@@ -189,6 +197,12 @@ def flat_vs_per_leaf(fast: bool) -> dict:
     return {
         "optimizer": "vr_lamb",
         "n_leaves": n_leaves,
+        # measurement config: key-wise checked against every other record's
+        # config by common.check_configs_agree (cost_model counts the same
+        # hostile layout, so flat.params/state_dtype must line up)
+        "config": {"flat": {"params": "oracle.hostile_params",
+                            "optimizer_name": "vr_lamb",
+                            "state_dtype": "float32"}},
         # the resolved execution plan: per-subsystem fused/reference plus
         # interpret + platform.  interpret=True means the latency numbers are
         # CPU-interpret (structural only); TPU reruns write interpret=False,
@@ -257,6 +271,10 @@ def packed_attention(fast: bool) -> dict:
     plan = Backend.all_fused()
     return {
         "shape": {"B": b, "S": s, "H": h, "KV": kvh, "D": d, "docs": list(lens)},
+        # the keys shared with cost_model's config.attn must agree key-wise
+        # (check_configs_agree) — the structural counts describe THIS shape
+        "config": {"attn": {"B": b, "S": s, "H": h, "KV": kvh, "D": d,
+                            "docs": list(lens)}},
         "plan": plan.describe(),
         "interpret": plan.interpret_mode(),
         "backend": jax.default_backend(),
@@ -270,8 +288,16 @@ def main(fast: bool = False) -> None:
     trainer_overhead(fast)
     update_math(fast)
     accumulation(fast)
-    # merge refuses sub-records whose resolved plans disagree (common.py)
-    rec = merge_bench_records(flat_vs_per_leaf(fast), packed_attention=packed_attention(fast))
+    from benchmarks.cost_model import compute as cost_compute
+
+    # merge refuses sub-records whose resolved plans disagree or whose
+    # measurement configs conflict key-wise (common.py); cost_compute also
+    # gates the PR's claimed structural reductions (cost_model.check_claims)
+    rec = merge_bench_records(
+        flat_vs_per_leaf(fast),
+        packed_attention=packed_attention(fast),
+        cost_model=cost_compute(fast=fast),
+    )
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_flat_state.json")
     with open(out, "w") as f:
         json.dump(rec, f, indent=1)

@@ -57,12 +57,63 @@ def check_plans_agree(record, what: str = "BENCH record") -> Dict[str, dict]:
     return plans
 
 
+def collect_configs(record, path="") -> Dict[str, dict]:
+    """Every ``config`` marker in a (nested) BENCH record, keyed by path —
+    same walk as collect_plans."""
+    configs: Dict[str, dict] = {}
+    if isinstance(record, dict):
+        if "config" in record and isinstance(record["config"], dict):
+            configs[path or "<root>"] = record["config"]
+        for key, val in record.items():
+            if key != "config":
+                configs.update(collect_configs(val, f"{path}/{key}" if path else key))
+    elif isinstance(record, list):
+        for i, val in enumerate(record):
+            configs.update(collect_configs(val, f"{path}[{i}]"))
+    return configs
+
+
+def _flatten_config(cfg: dict, prefix: str = "") -> Dict[str, object]:
+    flat: Dict[str, object] = {}
+    for k, v in cfg.items():
+        kk = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            flat.update(_flatten_config(v, kk))
+        else:
+            flat[kk] = v
+    return flat
+
+
+def check_configs_agree(record, what: str = "BENCH record") -> Dict[str, dict]:
+    """Refuse mismatched MEASUREMENT configs, not just backend plans: every
+    ``config`` marker is flattened to dotted keys and compared key-wise, so
+    two sub-records that both claim e.g. ``attn.S`` or ``flat.state_dtype``
+    must agree on the value — a latency row measured at S=256 can never
+    silently merge with a cost-model record counted at S=512.  Keys present
+    in only one record are fine (configs may be disjoint)."""
+    configs = collect_configs(record)
+    seen: Dict[str, tuple] = {}
+    for path, cfg in sorted(configs.items()):
+        for key, val in _flatten_config(cfg).items():
+            vj = json.dumps(val, sort_keys=True)
+            if key in seen and seen[key][1] != vj:
+                raise ValueError(
+                    f"{what}: refusing records with mismatched configs: "
+                    f"'{key}' is {seen[key][1]} at {seen[key][0]} but {vj} "
+                    f"at {path}"
+                )
+            seen.setdefault(key, (path, vj))
+    return configs
+
+
 def merge_bench_records(base: dict, **sub_records: dict) -> dict:
     """Merge benchmark sub-records into one BENCH dict, refusing when their
-    ``plan`` fields disagree (see check_plans_agree)."""
+    ``plan`` fields disagree (check_plans_agree) or their measurement
+    ``config`` fields conflict key-wise (check_configs_agree)."""
     merged = dict(base)
     merged.update(sub_records)
     check_plans_agree(merged, what="merge_bench_records")
+    check_configs_agree(merged, what="merge_bench_records")
     return merged
 
 

@@ -13,6 +13,7 @@
 ``python -m benchmarks.run``            full pass (CPU, ~15 min)
 ``python -m benchmarks.run --fast``     reduced sweeps (~4 min)
 ``python -m benchmarks.run --only linreg,gengap``
+``python -m benchmarks.run --check-regression``  structural cost gate only
 """
 from __future__ import annotations
 
@@ -43,11 +44,12 @@ BENCH_JSONS = [
 
 def validate_bench_plans() -> bool:
     """Post-run gate: every ``plan`` marker inside each machine-readable
-    record file must agree (one resolved Backend per record file) — a record
-    mixing, say, a TPU fused rerun with leftover CPU-interpret sub-records is
-    refused here even if it was hand-assembled rather than merged through
-    common.py."""
-    from benchmarks.common import check_plans_agree
+    record file must agree (one resolved Backend per record file), and every
+    ``config`` marker must agree key-wise (shapes/optimizer/dtype) — a record
+    mixing, say, a TPU fused rerun with leftover CPU-interpret sub-records,
+    or an S=256 fast sweep with an S=512 cost record, is refused here even
+    if it was hand-assembled rather than merged through common.py."""
+    from benchmarks.common import check_configs_agree, check_plans_agree
 
     ok = True
     for path in BENCH_JSONS:
@@ -55,19 +57,55 @@ def validate_bench_plans() -> bool:
             continue
         with open(path) as f:
             rec = json.load(f)
-        try:
-            check_plans_agree(rec, what=os.path.basename(path))
-        except ValueError as e:
-            print(f"# {e}", file=sys.stderr)
-            ok = False
+        for check in (check_plans_agree, check_configs_agree):
+            try:
+                check(rec, what=os.path.basename(path))
+            except ValueError as e:
+                print(f"# {e}", file=sys.stderr)
+                ok = False
     return ok
+
+
+def check_regression() -> int:
+    """``--check-regression``: recompute the structural cost model (pure
+    host arithmetic — replays index maps, runs no kernels) at the COMMITTED
+    config and fail if the counted hbm_bytes_per_step / mxu_flops_per_step
+    regressed >5% vs BENCH_flat_state.json, or if the PR's claimed
+    reductions (fused-backward recompute MXU, phase-aware update DMA) no
+    longer hold.  Wired into the verify skill so a grid/index-map change
+    that silently reintroduces DMA or recompute fails pre-merge."""
+    from benchmarks import cost_model
+
+    path = BENCH_JSONS[0]
+    if not os.path.exists(path):
+        print(f"# {os.path.basename(path)} missing — run benchmarks first",
+              file=sys.stderr)
+        return 1
+    with open(path) as f:
+        committed = json.load(f)
+    failures = cost_model.check_regression(committed)
+    for msg in failures:
+        print(f"# REGRESSION: {msg}", file=sys.stderr)
+    if not failures:
+        fresh = committed["cost_model"]
+        print("# cost-model regression check OK "
+              f"(hbm_bytes_per_step={fresh['hbm_bytes_per_step']:,}, "
+              f"mxu_flops_per_step={fresh['mxu_flops_per_step']:,})")
+    return 1 if failures else 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument(
+        "--check-regression", action="store_true",
+        help="structural cost-model gate vs committed BENCH_flat_state.json "
+             "(no benchmarks are run)",
+    )
     args = ap.parse_args()
+    if args.check_regression:
+        sys.exit(check_regression())
     only = [s.strip() for s in args.only.split(",") if s.strip()]
     print("name,us_per_call,derived")
     t0 = time.time()

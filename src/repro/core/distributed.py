@@ -59,12 +59,15 @@ def device_grad_stats_fn(
 
     flat=True (the flat-state path; implied by a Backend plan whose stats
     subsystem is fused): the local gradient packs into the ParamLayout flat
-    buffer first, so the fused collective is one pmean over a single
-    contiguous (2*rows, LANE) array — no per-leaf stacked [g, g²] tree copy
-    — and the returned GradStats carries FlatBuffers ready for the
-    single-launch optimizer kernels.  fused=False still reproduces the
+    buffer first, then ONE Pallas kernel (flat_stats.flat_pack_square)
+    emits the collective-shaped (2, rows, LANE) [g; g²] payload in a single
+    read of the buffer — no per-leaf tree copy, and no jnp
+    concatenate/split round-trip either — so the fused collective is one
+    pmean and mean/sq come back as views of the reduced payload, ready for
+    the single-launch optimizer kernels.  fused=False still reproduces the
     paper's two-collective schedule, over flat carries.
     """
+    resolved = None
     if backend is not None:
         if flat:
             raise ValueError(
@@ -73,7 +76,8 @@ def device_grad_stats_fn(
             )
         from repro.backend import resolve_backend
 
-        flat = resolve_backend(backend, where="device_grad_stats_fn").fused("stats")
+        resolved = resolve_backend(backend, where="device_grad_stats_fn")
+        flat = resolved.fused("stats")
     k = dict(mesh.shape)[data_axis]
     gfn = jax.value_and_grad(loss_fn, has_aux=has_aux)
 
@@ -83,12 +87,17 @@ def device_grad_stats_fn(
         g = _tm(lambda x: x.astype(jnp.float32), g)
         if flat:
             from repro.core.layout import ParamLayout
+            from repro.kernels.flat_stats import flat_pack_square
+            from repro.kernels.ops import _interp
 
-            gf = ParamLayout.for_tree(params).pack(g, jnp.float32)
+            layout = ParamLayout.for_tree(params)
+            gf = layout.pack(g, jnp.float32)
             if fused:
-                payload = jnp.concatenate([gf, jnp.square(gf)])  # one flat carry
+                # one kernel builds the [g; g²] payload in a single read of
+                # gf; mean/sq are views of the reduced payload, not copies
+                payload = flat_pack_square(gf, layout, interpret=_interp(resolved))
                 payload = jax.lax.pmean(payload, data_axis)  # one collective
-                mean, sq = jnp.split(payload, 2)
+                mean, sq = payload[0], payload[1]
             else:  # paper-faithful two-collective schedule, flat carries
                 mean = jax.lax.pmean(gf, data_axis)
                 sq = jax.lax.pmean(jnp.square(gf), data_axis)

@@ -38,12 +38,21 @@ sliding windows past the end of a shorter kv sequence) produces EXACTLY zero
 output and ``lse = NEG_INF`` — not the `acc / max(l, eps)` garbage of a
 clamped divide.  ref.attention_ref is the oracle and shares the convention.
 
-Dead tiles are still skipped, by layout: implicit-arange callers keep the
-free grid-index predicate (``tile_reachable_static`` — selected by a static
-``implicit`` flag, statically dense grids skip the pl.when entirely), while
-explicit-position callers use per-tile pos/seg BOUNDS of the sanitized
-operand tiles (``tile_reachable`` — cheap VPU int min/max reductions) which
-also kill cross-segment tiles and fully-padded tails of packed rows.
+Dead tiles skip their DMA, not just their compute: the kv-side operands
+(k, v and the k_pos/k_seg rows) are indexed through a scalar-prefetched
+FETCH MAP (``kv_fetch_blocks``) that replays the dead-tile predicate
+OUTSIDE the kernel and forward-fills dead grid steps with the previous
+live kv block index — Mosaic skips an operand's copy-in whenever its
+index map returns the same block as the previous step, so fully-dead
+packed-tail and cross-segment tiles never fetch their k/v blocks at all.
+Implicit-arange callers get a STATIC numpy fetch map from
+``tile_reachable_static`` (causal grids stop re-DMAing above-diagonal
+blocks too) and keep the free grid-index compute predicate; explicit-
+position callers derive the map from per-tile pos/seg bounds
+(``tile_reachable`` vmapped over blocks) and the in-kernel live predicate
+becomes ``fetch[step] == ik`` — the fetched block is the tile's own block
+exactly on live steps, so compute can never run against a stale
+forward-filled kv window.
 
 Autodiff composes to arbitrary order: first-order grads run the fused Pallas
 backward; the Pallas entry points carry jnp-replica VJPs so jax.grad twice
@@ -57,6 +66,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -175,6 +185,65 @@ def _load_pos_seg(pos_ref, seg_ref, i, block: int, seq: int, seg_fill: int):
     return pos, seg
 
 
+def _ffill_fetch(live, nk, xp):
+    """live (..., nk) bool -> (..., nk) int32 fetch map: each live step
+    fetches its own block (fetch == ik); dead steps repeat the nearest live
+    index (previous live block, or — for leading dead runs — the FIRST live
+    block, pre-fetched early so arriving at it is free too).  Consecutive-
+    equal indices are exactly the steps whose copy-in Mosaic elides, so the
+    kv DMA count collapses to the number of LIVE tiles."""
+    ids = xp.where(live, xp.arange(nk, dtype=xp.int32), -1)
+    if xp is jnp:
+        ff = jax.lax.cummax(ids, axis=ids.ndim - 1)
+    else:
+        ff = np.maximum.accumulate(ids, axis=-1)
+    first = xp.argmax(live, axis=-1).astype(xp.int32)  # 0 when no tile is live
+    return xp.where(ff < 0, first[..., None], ff).astype(xp.int32)
+
+
+def kv_fetch_blocks(q_pos, k_pos, q_seg, k_seg, *, causal: bool, window: int,
+                    block_q: int, block_k: int):
+    """(B, nq, nk) int32 kv fetch map (+ the (B, nq, nk) live mask) from the
+    EXPLICIT position/segment operands — ``tile_reachable`` vmapped over the
+    block-padded pos/seg tiles, padded exactly like the in-kernel sanitize
+    (_load_pos_seg: pos -1, q-seg -1 / k-seg -2), then forward-filled so
+    dead grid steps repeat a live block index (see _ffill_fetch)."""
+    b, sq = q_pos.shape
+    skv = k_pos.shape[1]
+    nq, nk = -(-sq // block_q), -(-skv // block_k)
+
+    def blocks(x, n, block, fill):
+        pad = n * block - x.shape[1]
+        return jnp.pad(x, ((0, 0), (0, pad)), constant_values=fill).reshape(b, n, block)
+
+    qp = blocks(q_pos, nq, block_q, -1)
+    qs = blocks(q_seg, nq, block_q, -1)
+    kp = blocks(k_pos, nk, block_k, -1)
+    ks = blocks(k_seg, nk, block_k, -2)
+    live = jax.vmap(  # batch rows
+        lambda qpb, qsb, kpb, ksb: jax.vmap(  # q blocks
+            lambda qp1, qs1: jax.vmap(  # k blocks
+                lambda kp1, ks1: tile_reachable(qp1, kp1, qs1, ks1, causal, window)
+            )(kpb, ksb)
+        )(qpb, qsb)
+    )(qp, qs, kp, ks)
+    return _ffill_fetch(live, nk, jnp), live
+
+
+def static_fetch_blocks(nq: int, nk: int, block_q: int, block_k: int,
+                        causal: bool, window: int) -> np.ndarray:
+    """(nq, nk) int32 fetch map for the IMPLICIT arange layout, computed in
+    numpy at trace time from the grid-index predicate (identity for dense
+    grids; causal/window grids stop fetching unreachable blocks)."""
+    live = np.ones((nq, nk), bool)
+    for iq in range(nq):
+        for ik in range(nk):
+            ok = tile_reachable_static(iq, ik, block_q, block_k, causal, window)
+            if ok is not None:
+                live[iq, ik] = bool(ok)
+    return _ffill_fetch(live, nk, np)
+
+
 def _maybe_skip_dead_tile(
     compute, qp, kp, qs, ks, causal: bool, window: int,
     *, implicit: bool, iq, ik, block_q: int, block_k: int,
@@ -194,7 +263,7 @@ def _maybe_skip_dead_tile(
 
 
 def _kernel(
-    q_ref, k_ref, v_ref, qp_ref, kp_ref, qs_ref, ks_ref, *rest,
+    fetch_ref, q_ref, k_ref, v_ref, qp_ref, kp_ref, qs_ref, ks_ref, *rest,
     causal: bool, window: int, block_q: int, block_k: int, scale: float,
     seq_q: int, seq_kv: int, with_lse: bool, implicit: bool,
 ):
@@ -242,9 +311,21 @@ def _kernel(
         m_scr[...] = m_new
         l_scr[...] = l_new
 
-    _maybe_skip_dead_tile(_compute, qp, kp, qs, ks, causal, window,
-                          implicit=implicit, iq=iq, ik=ik,
-                          block_q=block_q, block_k=block_k)
+    if implicit:
+        # grid-index predicate: free, and the static fetch map is built from
+        # the SAME tile_reachable_static, so live steps always hold their own
+        # kv block.
+        _maybe_skip_dead_tile(_compute, qp, kp, qs, ks, causal, window,
+                              implicit=True, iq=iq, ik=ik,
+                              block_q=block_q, block_k=block_k)
+    else:
+        # the kv windows hold the FETCH-MAPPED block, which is this tile's own
+        # block exactly when the tile was live in the prefetched map (dead
+        # steps repeat a neighbouring live index, so their stale windows are
+        # never read).  Replaces the in-kernel tile_reachable bound reductions
+        # — the map was computed from the same predicate outside.
+        live = fetch_ref[(pl.program_id(0) * pl.num_programs(2) + iq) * nk + ik] == ik
+        pl.when(live)(_compute)
 
     @pl.when(ik == nk - 1)
     def _finalize():
@@ -259,45 +340,87 @@ def _kernel(
             )
 
 
+def fwd_geometry(b, sq, h, d, skv, kvh, *, block_q: int, block_k: int, with_lse: bool):
+    """Grid + named BlockSpecs of the forward pallas_call.
+
+    Single source of truth shared between _fwd_call and
+    benchmarks.cost_model.  Every index map takes the flattened
+    (B*nq*nk,) int32 fetch array as its trailing scalar-prefetch argument;
+    the kv-side maps (k, v, k_pos, k_seg) read the fetch-mapped block so
+    dead grid steps repeat the previous index and Mosaic elides their
+    copy-in.
+    """
+    g = h // kvh
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_k)
+    grid = (b, h, nq, nk)
+
+    def kv_block(b_, h_, iq, ik, f):
+        return (b_, f[(b_ * nq + iq) * nk + ik], h_ // g, 0)
+
+    def krow(b_, h_, iq, ik, f):
+        return (b_, f[(b_ * nq + iq) * nk + ik])
+
+    q_spec = pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik, f: (b_, iq, h_, 0))
+    kv_spec = pl.BlockSpec((1, block_k, 1, d), kv_block)
+    qrow_spec = pl.BlockSpec((1, block_q), lambda b_, h_, iq, ik, f: (b_, iq))
+    krow_spec = pl.BlockSpec((1, block_k), krow)
+    ins = {
+        "q": q_spec, "k": kv_spec, "v": kv_spec, "q_pos": qrow_spec,
+        "k_pos": krow_spec, "q_seg": qrow_spec, "k_seg": krow_spec,
+    }
+    outs = {"out": q_spec}
+    if with_lse:
+        outs["lse"] = pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik, f: (b_, h_, iq))
+    return grid, nq, nk, g, ins, outs
+
+
 def _fwd_call(q, k, v, q_pos, k_pos, q_seg, k_seg,
               *, causal, window, block_q, block_k, interpret, with_lse, implicit):
     """One pallas_call: out (B,S,H,D) [+ lse (B,H,S) f32 when with_lse]."""
     b, sq, h, d = q.shape
     skv, kvh = k.shape[1], k.shape[2]
-    g = h // kvh
-    nq = -(-sq // block_q)
-    nk = -(-skv // block_k)
     scale = d**-0.5
-
-    qrow_spec = pl.BlockSpec((1, block_q), lambda b_, h_, iq, ik: (b_, iq))
-    krow_spec = pl.BlockSpec((1, block_k), lambda b_, h_, iq, ik: (b_, ik))
+    grid, nq, nk, g, ins, out_spec_map = fwd_geometry(
+        b, sq, h, d, skv, kvh, block_q=block_q, block_k=block_k, with_lse=with_lse
+    )
+    if implicit:
+        fetch = jnp.asarray(
+            np.broadcast_to(
+                static_fetch_blocks(nq, nk, block_q, block_k, causal, window),
+                (b, nq, nk),
+            ).reshape(-1)
+        )
+    else:
+        fetch, _ = kv_fetch_blocks(
+            q_pos, k_pos, q_seg, k_seg,
+            causal=causal, window=window, block_q=block_q, block_k=block_k,
+        )
+        fetch = fetch.reshape(-1)
     out_shape = [jax.ShapeDtypeStruct((b, sq, h, d), q.dtype)]
-    out_specs = [pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0))]
     if with_lse:
         out_shape.append(jax.ShapeDtypeStruct((b, h, sq), jnp.float32))
-        out_specs.append(pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik: (b_, h_, iq)))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=list(ins.values()),
+        out_specs=list(out_spec_map.values()),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
     outs = pl.pallas_call(
         functools.partial(
             _kernel, causal=causal, window=window,
             block_q=block_q, block_k=block_k, scale=scale, seq_q=sq, seq_kv=skv,
             with_lse=with_lse, implicit=implicit,
         ),
-        grid=(b, h, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0)),
-            qrow_spec, krow_spec, qrow_spec, krow_spec,
-        ],
-        out_specs=out_specs,
+        grid_spec=grid_spec,
         out_shape=out_shape,
-        scratch_shapes=[
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
-        ],
         interpret=interpret,
-    )(q, k, v, q_pos, k_pos, q_seg, k_seg)
+    )(fetch, q, k, v, q_pos, k_pos, q_seg, k_seg)
     return tuple(outs) if with_lse else (outs[0],)
 
 

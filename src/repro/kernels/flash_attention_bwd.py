@@ -13,14 +13,24 @@ recomputed as ``exp(scale * q k^T - lse)`` (already softmax-normalized):
     dS_ij = p_ij (dp_ij - delta_i) * scale
     dq_i = sum_j dS_ij k_j           dk_j = sum_i dS_ij q_i
 
-Two kernels, mirroring the FA-2 grid split:
+ONE kernel on grid (B, KV, nk, G*nq): the inner dim walks every
+(group member, q block) pair while the kv block stays resident, so the
+s = q kᵀ / p recompute is shared — each tile pair does 5 matmuls
+(s, dp, dv, dk, dq) where the old split dq + dk/dv kernels did 7
+(s and dp recomputed by both), halving the recompute MXU work and
+dropping the grad launch count 3 → 2 (delta preprocess stays jnp):
 
-  * dq:      grid (B, H, nq, nk), kv innermost — each q block owns a dq
-             accumulator in VMEM scratch and sweeps kv blocks.
-  * dk/dv:   grid (B, KV, nk, G*nq), the inner dim walking every
-             (group member, q block) pair — each kv block owns dk/dv
-             accumulators and the GQA group-sum happens in the same sweep,
-             so outputs land directly in the kv-head shape.
+  * dk/dv accumulate in VMEM scratch owned by the resident kv block
+    (init at t == 0, finalized into the kv-head-shaped outputs at
+    t == G*nq - 1, the GQA group-sum folded into the same sweep);
+  * dq accumulates THROUGH ITS f32 OUTPUT WINDOW: each (q block, head)
+    window is revisited once per kv block (non-consecutive revisits —
+    Mosaic re-fetches the written-back window, the same contract
+    docs/flat_state.md invariant 3 relies on), zeroed unconditionally on
+    first visit (ik == 0) so all-dead rows emit exact zeros, and cast to
+    q.dtype outside the kernel.  f32 accumulation through HBM keeps bf16
+    inputs from rounding per revisit.  One dq tensor swept nk times costs
+    less HBM than dk+dv swept G*nq times would under a q-outer split.
 
 Both kernels take the same (q_pos, k_pos, q_seg, k_seg) operands as the
 forward and mask through the SAME tile_mask rule — positions < 0 are
@@ -89,42 +99,9 @@ def _p_ds(q, k, v, do, lse, delta, mask, scale):
     return p, ds
 
 
-def _dq_kernel(
+def _fused_bwd_kernel(
     q_ref, k_ref, v_ref, lse_ref, delta_ref, do_ref, qp_ref, kp_ref, qs_ref, ks_ref,
-    dq_ref, dq_scr,
-    *, causal: bool, window: int, block_q: int, block_k: int, scale: float,
-    seq_q: int, seq_kv: int, implicit: bool,
-):
-    iq = pl.program_id(2)
-    ik = pl.program_id(3)
-    nk = pl.num_programs(3)
-
-    @pl.when(ik == 0)
-    def _init():
-        dq_scr[...] = jnp.zeros_like(dq_scr)
-
-    qp, qs = _load_pos_seg(qp_ref, qs_ref, iq, block_q, seq_q, seg_fill=-1)
-    kp, ks = _load_pos_seg(kp_ref, ks_ref, ik, block_k, seq_kv, seg_fill=-2)
-
-    def _compute():
-        q, do, lse, delta = _load_q_side(q_ref, do_ref, lse_ref, delta_ref, iq, block_q, seq_q)
-        k, v = _load_kv_side(k_ref, v_ref, ik, block_k, seq_kv)
-        mask = tile_mask(qp, kp, qs, ks, causal, window)
-        _, ds = _p_ds(q, k, v, do, lse, delta, mask, scale)
-        dq_scr[...] += _dot(ds, k, ((1,), (0,)))  # (BQ, D)
-
-    _maybe_skip_dead_tile(_compute, qp, kp, qs, ks, causal, window,
-                          implicit=implicit, iq=iq, ik=ik,
-                          block_q=block_q, block_k=block_k)
-
-    @pl.when(ik == nk - 1)
-    def _finalize():
-        dq_ref[0, :, 0, :] = dq_scr[...].astype(dq_ref.dtype)
-
-
-def _dkv_kernel(
-    q_ref, k_ref, v_ref, lse_ref, delta_ref, do_ref, qp_ref, kp_ref, qs_ref, ks_ref,
-    dk_ref, dv_ref, dk_scr, dv_scr,
+    dq_ref, dk_ref, dv_ref, dk_scr, dv_scr,
     *, causal: bool, window: int, block_q: int, block_k: int, scale: float,
     seq_q: int, seq_kv: int, nq: int, g: int, implicit: bool,
 ):
@@ -137,6 +114,14 @@ def _dkv_kernel(
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
+    # the dq output window is revisited once per kv block; zero it on the
+    # FIRST visit unconditionally (dead tiles included) so q rows that
+    # reach no kv at all still emit exact zeros, then accumulate through
+    # the written-back window on later revisits.
+    @pl.when(ik == 0)
+    def _init_dq():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
     qp, qs = _load_pos_seg(qp_ref, qs_ref, iq, block_q, seq_q, seg_fill=-1)
     kp, ks = _load_pos_seg(kp_ref, ks_ref, ik, block_k, seq_kv, seg_fill=-2)
 
@@ -147,6 +132,7 @@ def _dkv_kernel(
         p, ds = _p_ds(q, k, v, do, lse, delta, mask, scale)
         dv_scr[...] += _dot(p, do, ((0,), (0,)))  # (BK, D)
         dk_scr[...] += _dot(ds, q, ((0,), (0,)))  # (BK, D)
+        dq_ref[0, :, 0, :] += _dot(ds, k, ((1,), (0,)))  # (BQ, D), f32 in HBM
 
     _maybe_skip_dead_tile(_compute, qp, kp, qs, ks, causal, window,
                           implicit=implicit, iq=iq, ik=ik,
@@ -181,59 +167,64 @@ def check_bwd_shapes(q, k, v, lse, delta, do):
             )
 
 
+def bwd_geometry(b, sq, h, d, skv, kvh, *, block_q: int, block_k: int):
+    """Grid + named BlockSpecs of the fused backward.
+
+    Single source of truth shared between flash_attention_bwd and
+    benchmarks.cost_model (which replays the index maps with concrete grid
+    indices to count block visits / HBM bytes).  Inner grid dim
+    t = ig * nq + iq walks every query head of the GQA group (head index
+    j*g + t//nq) and every q block while the kv block (b, ik, j) stays
+    resident.
+    """
+    g = h // kvh
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_k)
+    grid = (b, kvh, nk, g * nq)
+    q_spec = pl.BlockSpec(
+        (1, block_q, 1, d), lambda b_, j, ik, t: (b_, t % nq, j * g + t // nq, 0)
+    )
+    kv_spec = pl.BlockSpec((1, block_k, 1, d), lambda b_, j, ik, t: (b_, ik, j, 0))
+    row_spec = pl.BlockSpec((1, 1, block_q), lambda b_, j, ik, t: (b_, j * g + t // nq, t % nq))
+    qrow_spec = pl.BlockSpec((1, block_q), lambda b_, j, ik, t: (b_, t % nq))
+    krow_spec = pl.BlockSpec((1, block_k), lambda b_, j, ik, t: (b_, ik))
+    ins = {
+        "q": q_spec, "k": kv_spec, "v": kv_spec, "lse": row_spec,
+        "delta": row_spec, "do": q_spec, "q_pos": qrow_spec, "k_pos": krow_spec,
+        "q_seg": qrow_spec, "k_seg": krow_spec,
+    }
+    outs = {"dq": q_spec, "dk": kv_spec, "dv": kv_spec}
+    return grid, nq, nk, g, ins, outs
+
+
 def flash_attention_bwd(
     q, k, v, lse, delta, do, q_pos, k_pos, q_seg, k_seg,
     *, causal: bool, window: int, block_q: int, block_k: int, interpret: bool,
     implicit: bool = False,
 ):
-    """Fused backward: (dq, dk, dv) in two pallas_calls.
+    """Fused backward: (dq, dk, dv) in ONE pallas_call.
 
     q/do: (B,S,H,D); k/v: (B,Skv,KV,D); lse/delta: (B,H,S) f32;
     q_pos/q_seg: (B,S) int32; k_pos/k_seg: (B,Skv) int32.
+    dq accumulates in f32 through its output window and is cast to q.dtype
+    here (a jnp convert, not a launch).
     """
     check_bwd_shapes(q, k, v, lse, delta, do)
     b, sq, h, d = q.shape
     skv, kvh = k.shape[1], k.shape[2]
-    g = h // kvh
-    nq = -(-sq // block_q)
-    nk = -(-skv // block_k)
     scale = d**-0.5
-    kw = dict(causal=causal, window=window, block_q=block_q, block_k=block_k,
-              scale=scale, seq_q=sq, seq_kv=skv, implicit=implicit)
-
-    q_spec = pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0))
-    kv_spec = pl.BlockSpec((1, block_k, 1, d), lambda b_, h_, iq, ik: (b_, ik, h_ // g, 0))
-    row_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h_, iq, ik: (b_, h_, iq))
-    qrow_spec = pl.BlockSpec((1, block_q), lambda b_, h_, iq, ik: (b_, iq))
-    krow_spec = pl.BlockSpec((1, block_k), lambda b_, h_, iq, ik: (b_, ik))
-    dq = pl.pallas_call(
-        functools.partial(_dq_kernel, **kw),
-        grid=(b, h, nq, nk),
-        in_specs=[q_spec, kv_spec, kv_spec, row_spec, row_spec, q_spec,
-                  qrow_spec, krow_spec, qrow_spec, krow_spec],
-        out_specs=pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
-        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
-        interpret=interpret,
-    )(q, k, v, lse, delta, do, q_pos, k_pos, q_seg, k_seg)
-
-    # inner grid dim t = ig * nq + iq walks every query head of the GQA group
-    # (head index j*g + t//nq) and every q block; the kv block (b, ik, j) is
-    # revisited for the whole sweep while dk/dv accumulate in scratch.
-    q_spec2 = pl.BlockSpec(
-        (1, block_q, 1, d), lambda b_, j, ik, t: (b_, t % nq, j * g + t // nq, 0)
+    grid, nq, nk, g, ins, outs = bwd_geometry(
+        b, sq, h, d, skv, kvh, block_q=block_q, block_k=block_k
     )
-    kv_spec2 = pl.BlockSpec((1, block_k, 1, d), lambda b_, j, ik, t: (b_, ik, j, 0))
-    row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, j, ik, t: (b_, j * g + t // nq, t % nq))
-    qrow_spec2 = pl.BlockSpec((1, block_q), lambda b_, j, ik, t: (b_, t % nq))
-    krow_spec2 = pl.BlockSpec((1, block_k), lambda b_, j, ik, t: (b_, ik))
-    dk, dv = pl.pallas_call(
-        functools.partial(_dkv_kernel, nq=nq, g=g, **kw),
-        grid=(b, kvh, nk, g * nq),
-        in_specs=[q_spec2, kv_spec2, kv_spec2, row_spec2, row_spec2, q_spec2,
-                  qrow_spec2, krow_spec2, qrow_spec2, krow_spec2],
-        out_specs=[kv_spec2, kv_spec2],
+    kw = dict(causal=causal, window=window, block_q=block_q, block_k=block_k,
+              scale=scale, seq_q=sq, seq_kv=skv, nq=nq, g=g, implicit=implicit)
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_fused_bwd_kernel, **kw),
+        grid=grid,
+        in_specs=list(ins.values()),
+        out_specs=list(outs.values()),
         out_shape=[
+            jax.ShapeDtypeStruct((b, sq, h, d), jnp.float32),
             jax.ShapeDtypeStruct((b, skv, kvh, d), k.dtype),
             jax.ShapeDtypeStruct((b, skv, kvh, d), v.dtype),
         ],
@@ -243,7 +234,7 @@ def flash_attention_bwd(
         ],
         interpret=interpret,
     )(q, k, v, lse, delta, do, q_pos, k_pos, q_seg, k_seg)
-    return dq, dk, dv
+    return dq.astype(q.dtype), dk, dv
 
 
 # ---------------------------------------------------------------------------

@@ -16,9 +16,11 @@ derived per-stream ordinals cannot align (resolve_positions docstring), so
 there is no safe default to fall back to.
 
 Mosaic checklist (pallas_guide):
-  * f32 min tile is (8, 128): the lane axis is the kernel's sublane axis, so
-    L is padded up to a multiple of 8 with pos = -1 / seg = -1 pad lanes
-    (masked rows emit exact 0 and are sliced off).
+  * the min tile is DTYPE-DEPENDENT — (8, 128) for f32 but (16, 128) for
+    bf16: the lane axis is the kernel's sublane axis, so L is padded up to
+    the query dtype's sublane multiple (_sublane) with pos = -1 / seg = -1
+    pad lanes (masked rows emit exact 0 and are sliced off).  A hard-coded
+    8 would hand Mosaic a half-height bf16 q tile.
   * block_q covers the whole padded lane axis (one q tile per row); block_k
     tiles the cache, so dead cache tiles (kpos still -1 past the fill
     cursor) are skipped by tile_reachable's pos/seg bounds.
@@ -33,7 +35,10 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import DEFAULT_BLOCK_K, _fwd_call
 
-SUBLANE = 8  # f32 min sublane count — pad the lane axis up to this multiple
+def _sublane(dtype) -> int:
+    """Min sublane count of the q tile for ``dtype``: 32 // itemsize (f32 ->
+    8, bf16/f16 -> 16, int8/fp8 -> 32) — the Mosaic packed-tile rule."""
+    return 32 // jnp.dtype(dtype).itemsize
 
 
 @functools.partial(
@@ -68,7 +73,8 @@ def flash_decode(
         )
     b, l, h, d = q.shape
     skv = k.shape[1]
-    lp = -(-l // SUBLANE) * SUBLANE
+    sub = _sublane(q.dtype)
+    lp = -(-l // sub) * sub
     pad = lp - l
     q_pos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (b, l))
     q_seg = jnp.broadcast_to(jnp.asarray(q_seg, jnp.int32), (b, l))

@@ -31,6 +31,13 @@ tests run them unsharded against the fused kernels).  The (n_blocks, 1)
 leaf-id map rides as a SHARDED operand: its row split under the same
 PartitionSpec is exactly the buffer's block split, so each shard reads its
 own leaf ids with no index arithmetic.
+
+PHASE-AWARE maps don't apply here: these per-shard kernels run SINGLE-PHASE
+1-D grids (the multi-phase structure lives in the gathered flat_update
+kernels, whose PHASE_WINDOWS index maps park operands outside their live
+phases — see flat_update's docstring).  Every operand of a per-shard launch
+is read/written on every grid step, so there is nothing to park; the math
+inheritance above is unaffected.
 """
 from __future__ import annotations
 

@@ -113,6 +113,34 @@ def flat_moments_finalize(gs, g2s, k, layout: ParamLayout, interpret: bool = Tru
     )(gs, g2s, inv)
 
 
+def _pack_square_kernel(g_ref, out_ref):
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[0] = g
+    out_ref[1] = g * g
+
+
+@functools.partial(jax.jit, static_argnames=("layout", "interpret"))
+def flat_pack_square(gf, layout: ParamLayout, interpret: bool = True):
+    """(rows, LANE) flat gradient -> (2, rows, LANE) [g; g²] payload: one
+    launch, ONE read of gf per block.
+
+    The output is the COLLECTIVE-SHAPED carry device_grad_stats_fn pmean's
+    across the data axis (mean = payload[0], sq = payload[1] are views, not
+    copies) — replacing the jnp concatenate([gf, square(gf)]) / split
+    round-trip that re-read gf and materialized two extra copies of the
+    buffer per step.  Grid derives from the LOCAL rows (_local_blocks) so
+    the same wrapper runs per-shard under shard_map."""
+    blk = _blk(layout)
+    return pl.pallas_call(
+        _pack_square_kernel,
+        grid=(_local_blocks(gf, layout),),
+        in_specs=[blk],
+        out_specs=pl.BlockSpec((2, layout.block_rows, LANE), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((2,) + tuple(gf.shape), jnp.float32),
+        interpret=interpret,
+    )(gf)
+
+
 def _vmap_kernel(g_ref, mean_ref, sq_ref, *, nk: int, inv: float):
     j = pl.program_id(1)
 

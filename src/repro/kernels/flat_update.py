@@ -21,6 +21,20 @@ phase 2 (flushed to HBM between visits; validated in interpret mode, and a
 named TPU-Mosaic validation item in ROADMAP — Mosaic must re-fetch output
 windows on non-consecutive revisits).
 
+PHASE-AWARE INDEX MAPS: each (rows, LANE) operand carries the inclusive
+phase window in which the kernel actually reads/writes it (PHASE_WINDOWS —
+single source of truth, also replayed by benchmarks.cost_model).  Outside
+its window the operand's index map PARKS the block index at 0, so
+consecutive grid steps return the same index and Mosaic elides the
+copy-in/copy-out entirely — e.g. the LAMB phase-2 trust apply stops
+re-DMAing the seven g/ga/g2/m/v/p/w inputs it never reads, cutting the
+update's HBM block visits by >half.  Parking is safe because (a) kernels
+only touch refs inside the matching ``ph ==`` guards (unconditional reads
+are limited to operands live in every phase), (b) a parked OUTPUT window
+is never written, so its departure write-back restores the bytes it
+fetched, and (c) window transitions live->parked change the index, forcing
+the write-back/fetch at the phase boundary.
+
 Semantics match the per-leaf oracle kernels (vr_update/vr_adam/vr_lamb.py)
 and the jnp path exactly (tests/test_oracle.py + tests/test_layout.py):
 the GSNR ratio derives from the raw group moments (g, g2) but scales the
@@ -49,6 +63,59 @@ def _specs(layout: ParamLayout):
     inv = pl.BlockSpec((layout.leaf_slots, 1), lambda ph, b: (0, 0))
     scal = pl.BlockSpec((1, 8), lambda ph, b: (0, 0))
     return blk, lid, inv, scal
+
+
+# Inclusive phase windows per (rows, LANE) operand: the phases in which each
+# kernel actually reads/writes it.  SINGLE SOURCE OF TRUTH for the
+# phase-aware BlockSpecs below AND for benchmarks.cost_model, which replays
+# the index maps to count the DMA savings.  The leaf-id map stays live in
+# every phase (every phase indexes its scratch row by leaf); the inv-size
+# and scalar operands already use constant index maps (one fetch ever).
+PHASE_WINDOWS = {
+    "flat_vr_scale": dict(
+        n_phases=2,
+        ins=dict(g=(0, 1), ga=(1, 1), g2=(0, 1)),
+        outs=dict(sg=(1, 1), r=(1, 1)),
+    ),
+    "flat_vr_adam": dict(
+        n_phases=2,
+        ins=dict(g=(0, 1), ga=(1, 1), g2=(0, 1), m=(1, 1), v=(1, 1),
+                 p=(1, 1), w=(1, 1)),
+        outs=dict(upd=(1, 1), m_out=(1, 1), v_out=(1, 1), p_out=(1, 1)),
+    ),
+    "flat_vr_lamb": dict(
+        n_phases=3,
+        ins=dict(g=(0, 1), ga=(1, 1), g2=(0, 1), m=(1, 1), v=(1, 1),
+                 p=(1, 1), w=(1, 1)),
+        outs=dict(upd=(1, 2), m_out=(1, 1), v_out=(1, 1), p_out=(1, 1)),
+    ),
+    "flat_vr_lars": dict(
+        n_phases=3,
+        ins=dict(g=(0, 1), ga=(1, 1), g2=(0, 1), m=(2, 2), w=(1, 1)),
+        outs=dict(upd=(1, 2), m_out=(2, 2)),
+    ),
+}
+
+
+def _phased_blk(layout: ParamLayout, lo: int, hi: int, n_phases: int):
+    """Row-block spec live only in phases [lo, hi]: other phases park the
+    window at block 0, making consecutive index-map results equal so Mosaic
+    skips the DMA.  Operands live in every phase keep the plain map."""
+    if lo == 0 and hi == n_phases - 1:
+        return pl.BlockSpec((layout.block_rows, LANE), lambda ph, b: (b, 0))
+    return pl.BlockSpec(
+        (layout.block_rows, LANE),
+        lambda ph, b: (b * ((ph >= lo) & (ph <= hi)), 0),
+    )
+
+
+def _phased_specs(layout: ParamLayout, name: str):
+    """{operand: BlockSpec} dicts (ins, outs) from PHASE_WINDOWS[name]."""
+    pw = PHASE_WINDOWS[name]
+    n = pw["n_phases"]
+    ins = {k: _phased_blk(layout, lo, hi, n) for k, (lo, hi) in pw["ins"].items()}
+    outs = {k: _phased_blk(layout, lo, hi, n) for k, (lo, hi) in pw["outs"].items()}
+    return ins, outs
 
 
 def _leaf_meta(layout: ParamLayout):
@@ -110,14 +177,15 @@ def _vr_scale_kernel(
 @functools.partial(jax.jit, static_argnames=("layout", "gamma", "eps", "interpret"))
 def flat_vr_scale(g, ga, g2, layout: ParamLayout, *, gamma, eps, interpret: bool = True):
     """Fused (scaled_grad, r) over the whole flat buffer: one launch."""
-    blk, lid, inv, _ = _specs(layout)
+    _, lid, inv, _ = _specs(layout)
+    pin, pout = _phased_specs(layout, "flat_vr_scale")
     lids, invsz = _leaf_meta(layout)
     sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), _f32)
     return pl.pallas_call(
         functools.partial(_vr_scale_kernel, gamma=gamma, eps=eps),
         grid=(2, layout.n_blocks),
-        in_specs=[lid, inv, blk, blk, blk],
-        out_specs=(blk, blk),
+        in_specs=[lid, inv, pin["g"], pin["ga"], pin["g2"]],
+        out_specs=(pout["sg"], pout["r"]),
         out_shape=(sds, sds),
         scratch_shapes=[pltpu.VMEM((layout.leaf_slots, LANE), _f32)],
         interpret=interpret,
@@ -194,7 +262,8 @@ def flat_vr_adam(
     scal = _scal8(lr, bc1, bc2, bc3).  upd already includes weight decay and
     the -lr scale; m'/v'/p' come back in ``state_dtype``.
     """
-    blk, lid, inv, scal_spec = _specs(layout)
+    _, lid, inv, scal_spec = _specs(layout)
+    pin, pout = _phased_specs(layout, "flat_vr_adam")
     lids, invsz = _leaf_meta(layout)
     sd = jnp.dtype(state_dtype)
     f32_sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), _f32)
@@ -205,8 +274,9 @@ def flat_vr_adam(
             b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
         ),
         grid=(2, layout.n_blocks),
-        in_specs=[lid, inv] + [blk] * 7 + [scal_spec],
-        out_specs=(blk,) * 4,
+        in_specs=[lid, inv] + [pin[n] for n in ("g", "ga", "g2", "m", "v", "p", "w")]
+        + [scal_spec],
+        out_specs=tuple(pout[n] for n in ("upd", "m_out", "v_out", "p_out")),
         out_shape=(f32_sds, sd_sds, sd_sds, sd_sds),
         scratch_shapes=[pltpu.VMEM((layout.leaf_slots, LANE), _f32)],
         interpret=interpret,
@@ -293,7 +363,8 @@ def flat_vr_lamb(
     Three grid phases: r-mean partials, element-wise update + trust-ratio
     norm partials, per-leaf trust-ratio apply (-lr * ratio * u in place).
     """
-    blk, lid, inv, scal_spec = _specs(layout)
+    _, lid, inv, scal_spec = _specs(layout)
+    pin, pout = _phased_specs(layout, "flat_vr_lamb")
     lids, invsz = _leaf_meta(layout)
     sd = jnp.dtype(state_dtype)
     f32_sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), _f32)
@@ -305,8 +376,9 @@ def flat_vr_lamb(
             b1=b1, b2=b2, b3=b3, eps=eps, wd=wd, gamma=gamma, gsnr_eps=gsnr_eps,
         ),
         grid=(3, layout.n_blocks),
-        in_specs=[lid, inv] + [blk] * 7 + [scal_spec],
-        out_specs=(blk,) * 4,
+        in_specs=[lid, inv] + [pin[n] for n in ("g", "ga", "g2", "m", "v", "p", "w")]
+        + [scal_spec],
+        out_specs=tuple(pout[n] for n in ("upd", "m_out", "v_out", "p_out")),
         out_shape=(f32_sds, sd_sds, sd_sds, sd_sds),
         scratch_shapes=[acc, acc, acc],
         interpret=interpret,
@@ -373,15 +445,17 @@ def flat_vr_lars(
     scal = _scal8(lr, gamma) — gamma rides in the scalar block because the
     LARS tests sweep it densely and a static gamma would retrace per value.
     """
-    blk, lid, inv, scal_spec = _specs(layout)
+    _, lid, inv, scal_spec = _specs(layout)
+    pin, pout = _phased_specs(layout, "flat_vr_lars")
     lids, invsz = _leaf_meta(layout)
     sds = jax.ShapeDtypeStruct((layout.n_rows, LANE), _f32)
     acc = pltpu.VMEM((layout.leaf_slots, LANE), _f32)
     return pl.pallas_call(
         functools.partial(_vr_lars_kernel, mu=mu, wd=wd, trust=trust, eps=eps),
         grid=(3, layout.n_blocks),
-        in_specs=[lid, inv] + [blk] * 5 + [scal_spec],
-        out_specs=(blk, blk),
+        in_specs=[lid, inv] + [pin[n] for n in ("g", "ga", "g2", "m", "w")]
+        + [scal_spec],
+        out_specs=(pout["upd"], pout["m_out"]),
         out_shape=(sds, sds),
         scratch_shapes=[acc, acc, acc],
         interpret=interpret,

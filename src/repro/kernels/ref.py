@@ -141,6 +141,14 @@ def attention_fwd_ref(
     average a clamped softmax would produce.  This is THE jnp attention
     reference — the second-order VJP fallback in kernels/flash_attention.py
     uses it too, so the masking convention has a single jnp home.
+
+    BACKWARD ORACLE CONTRACT: the fused one-pass dq/dk/dv kernel
+    (kernels/flash_attention_bwd.py) is certified against ``jax.grad`` of
+    THIS function (and its explicit replica attention_bwd_ref lives next to
+    the kernel).  Because the kernel recomputes p from the forward's lse
+    residual, any change to the masking/lse conventions here silently
+    changes the gradients the kernel must reproduce — keep the two in
+    lockstep (tests/test_oracle.py pins the full hostile grid).
     """
     b, sq, h, d = q.shape
     kvh = k.shape[2]

@@ -15,10 +15,13 @@ Three execution paths:
                  prefill.  The kernel carries a custom VJP with fused Pallas
                  backward kernels (kernels/flash_attention_bwd.py) and takes
                  EXPLICIT position/segment operands, so packed and offset
-                 position layouts run fused too.  Self-attention DECODE runs
-                 a forward-only flash kernel over the paged cache
-                 (kernels/flash_decode.py) — only cross-attention (ragged
-                 memory-explicit kv) falls back to the jnp paths.
+                 position layouts run fused too.  CROSS-attention train and
+                 prefill route through the same Sq != Skv kernel with
+                 explicit all-zero segments (cross has no segment gating).
+                 Self-attention DECODE runs a forward-only flash kernel over
+                 the paged cache (kernels/flash_decode.py) — only cross
+                 DECODE (ragged memory-explicit kv cache) falls back to the
+                 jnp paths.
 
 All three paths share one masking contract: positions < 0 are padding,
 causal/window compare absolute positions, and segment ids — derived from
@@ -349,6 +352,23 @@ def attention(
                 qh, k, v, q_pos, k_pos, q_seg=seg_q, k_seg=seg_k,
                 causal=causal, window=window, backend=bk,
             )
+    elif bk.fused("attention") and cross and mode in ("train", "prefill"):
+        # Fused cross-attention (train/prefill): the same Sq != Skv kernel
+        # with fully explicit operands (M pads up to the kv block size).
+        # Segments are EXPLICIT ZEROS on both sides — cross-attention has no
+        # segment gating (_mask passes seg None), so letting the kernel
+        # derive them (q from a packed q_pos, k from a mem_pos) would
+        # mis-gate valid q->memory pairs; only pos >= 0 validity masking
+        # applies.  Grads flow to q AND the memory projections through the
+        # kernel's fused one-pass backward.  Cross DECODE stays on the jnp
+        # paths: its kv comes from the ragged prefill cache.
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            qh, k, v, q_pos, k_pos,
+            q_seg=jnp.zeros_like(q_pos), k_seg=jnp.zeros_like(k_pos),
+            causal=False, window=0, backend=bk,
+        )
     elif bk.fused("attention") and not cross and mode == "decode":
         # Fused decode: forward-only flash kernel over the paged cache with
         # fully explicit positions/segments on both sides (Sq = lanes,

@@ -177,6 +177,30 @@ def test_flash_decode_idle_lanes_and_empty_slots_emit_zero():
     np.testing.assert_allclose(np.asarray(out), np.asarray(out_tight), atol=1e-6)
 
 
+def test_flash_decode_bf16_pads_to_dtype_sublane():
+    """The q-tile sublane multiple is dtype-derived (32 // itemsize: f32 ->
+    8, bf16 -> 16), not a hard-coded 8 — a bf16 decode must pad its lane
+    axis to 16 and still match the paged oracle.  Regression for the
+    half-height bf16 q tile a fixed f32 sublane count would hand Mosaic."""
+    from repro.kernels.flash_decode import _sublane, flash_decode
+
+    assert _sublane(jnp.float32) == 8
+    assert _sublane(jnp.bfloat16) == 16
+
+    q, k, v, q_pos, k_pos, q_seg, k_seg = _paged_cache_case(
+        jax.random.PRNGKey(5), b=2, c=48, lanes=3, kvh=2, d=32, n_fill=30
+    )
+    qb, kb, vb = (x.astype(jnp.bfloat16) for x in (q, k, v))
+    out = flash_decode(qb, kb, vb, q_pos, k_pos, q_seg, k_seg, causal=True)
+    exp = ref.decode_attention_ref(qb, kb, vb, q_pos, k_pos, q_seg, k_seg,
+                                   causal=True)
+    assert out.shape == qb.shape and out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
 def test_flash_decode_requires_explicit_operands():
     from repro.kernels.flash_decode import flash_decode
 

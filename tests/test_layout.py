@@ -195,8 +195,8 @@ def test_stale_full_train_step_stays_flat():
     """End to end stale step (gsnr_refresh amortization) under a fused plan:
     1 stats launch + 0 update launches on the optimizer side — the mean
     gradient never unpacks into a tree until the update leaves the
-    transform.  With fused attention the full stale step is 5 launches
-    (1 attn fwd + 1 remat recompute + 2 attn bwd + 1 g-accum)."""
+    transform.  With fused attention the full stale step is 4 launches
+    (1 attn fwd + 1 remat recompute + 1 fused attn bwd + 1 g-accum)."""
     from repro.backend import Backend
     from repro.configs import get_smoke
     from repro.data import lm_batches
@@ -211,7 +211,7 @@ def test_stale_full_train_step_stays_flat():
     state = init_state(cfg)
     step_fn, _ = make_train_step(cfg, make_loss_fn(cfg))
     jaxpr = jax.make_jaxpr(lambda s, b: step_fn(s, b, False))(state, batch)
-    assert count_pallas_calls(jaxpr) == 5, count_pallas_calls(jaxpr)
+    assert count_pallas_calls(jaxpr) == 4, count_pallas_calls(jaxpr)
 
 
 def test_vmap_grad_stats_is_one_pallas_call():
@@ -234,8 +234,9 @@ def test_vmap_grad_stats_is_one_pallas_call():
 def test_flash_attention_train_vjp_launch_counts():
     """The attention custom VJP is structurally fused: the primal is ONE
     pallas_call (no LSE emitted when nothing differentiates), and a jax.grad
-    trace is exactly THREE — the LSE-emitting forward + the dq kernel + the
-    fused dk/dv kernel.  The delta preprocess is a jnp einsum, not a launch."""
+    trace is exactly TWO — the LSE-emitting forward + the fused one-pass
+    dq/dk/dv backward (the s = qkᵀ recompute shared across all three grads).
+    The delta preprocess is a jnp einsum, not a launch."""
     import jax.numpy as jnp
 
     from repro.kernels.flash_attention import flash_attention
@@ -249,14 +250,15 @@ def test_flash_attention_train_vjp_launch_counts():
     grad = jax.make_jaxpr(
         jax.grad(lambda *a: jnp.sum(flash_attention(*a)), argnums=(0, 1, 2))
     )(q, k, v)
-    assert count_pallas_calls(grad) == 3, grad
+    assert count_pallas_calls(grad) == 2, grad
 
 
 def test_packed_flash_attention_launch_counts():
     """The PACKED path is structurally identical to the implicit-arange path:
     explicit positions/segments ride the same pallas_calls as extra operands
-    — primal 1, jax.grad exactly 3 (LSE fwd + dq + fused dk/dv).  A packing
-    gate regression (packed layouts falling back to jnp) changes the count."""
+    — primal 1, jax.grad exactly 2 (LSE fwd + fused dq/dk/dv backward).  A
+    packing gate regression (packed layouts falling back to jnp) changes the
+    count."""
     import oracle as orc
 
     from repro.kernels.flash_attention import flash_attention
@@ -269,7 +271,7 @@ def test_packed_flash_attention_launch_counts():
     grad = jax.make_jaxpr(
         jax.grad(lambda *a: jnp.sum(fn(*a)), argnums=(0, 1, 2))
     )(q, k, v)
-    assert count_pallas_calls(grad) == 3, grad
+    assert count_pallas_calls(grad) == 2, grad
 
 
 def test_packed_batch_attention_is_on_the_fused_path():
@@ -296,8 +298,9 @@ def test_packed_batch_attention_is_on_the_fused_path():
 
 def test_packed_full_train_step_launch_count():
     """End to end on a PACKED batch (positions/segments from the data
-    packer): the same 7 structural pallas_calls as the implicit-arange step
-    — attention fwd + remat recompute + dq + dk/dv + 2 stats + 1 update."""
+    packer): the same 6 structural pallas_calls as the implicit-arange step
+    — attention fwd + remat recompute + fused dq/dk/dv + 2 stats + 1
+    update."""
     from repro.configs import get_smoke
     from repro.data import packed_lm_batches
     from repro.train import init_state, make_loss_fn, make_train_step
@@ -312,16 +315,16 @@ def test_packed_full_train_step_launch_count():
     state = init_state(cfg)
     step_fn, _ = make_train_step(cfg, make_loss_fn(cfg))
     jaxpr = jax.make_jaxpr(step_fn)(state, batch)
-    assert count_pallas_calls(jaxpr) == 7, count_pallas_calls(jaxpr)
+    assert count_pallas_calls(jaxpr) == 6, count_pallas_calls(jaxpr)
 
 
 def test_full_train_step_launch_count():
     """End to end (fresh VR-LAMB step, use_pallas): the whole hot loop is
-    Pallas.  Exactly 7 structural pallas_calls, regardless of leaf count:
+    Pallas.  Exactly 6 structural pallas_calls, regardless of leaf count:
 
       1  attention forward in the primal layer scan (no LSE)
       1  attention forward recompute under remat (LSE-emitting custom-vjp fwd)
-      2  attention backward (dq kernel + fused dk/dv kernel)
+      1  attention backward (fused one-pass dq/dk/dv kernel)
       2  grad-stats (scan-body accumulation + finalize)
       1  flat optimizer update
 
@@ -341,7 +344,7 @@ def test_full_train_step_launch_count():
     state = init_state(cfg)
     step_fn, _ = make_train_step(cfg, make_loss_fn(cfg))
     jaxpr = jax.make_jaxpr(step_fn)(state, batch)
-    assert count_pallas_calls(jaxpr) == 7, count_pallas_calls(jaxpr)
+    assert count_pallas_calls(jaxpr) == 6, count_pallas_calls(jaxpr)
 
 
 # ---------------------------------------------------------------------------

@@ -106,6 +106,59 @@ def test_cross_attention_prefill_cache_reused_at_decode():
     np.testing.assert_allclose(np.asarray(out_dec[:, 0]), np.asarray(out_full[:, -1]), atol=1e-5)
 
 
+def test_cross_attention_fused_matches_reference():
+    """Cross-attention train/prefill routes through the fused Sq != Skv
+    flash kernel (explicit all-zero segments — cross has NO segment gating,
+    so derived segments from a packed q_pos or a mem_pos must never gate).
+    Fused vs jnp reference must agree on outputs AND grads (x and memory)
+    with a padded q tail, padded memory slots, and M != S off the kv block
+    grid; structurally the fused train VJP is the usual fwd + fused-bwd
+    launch pair."""
+    from repro.backend import Backend
+    from repro.kernels.ops import count_pallas_calls
+
+    d_model, h, kv, hd = 32, 4, 2, 8
+    b, s, m = 2, 24, 17  # M != S, both far off the 128 kv block grid
+    key = jax.random.PRNGKey(9)
+    p = attn_init(key, d_model, h, kv, hd)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d_model))
+    mem = jax.random.normal(jax.random.fold_in(key, 2), (b, m, d_model))
+    pos_row = np.arange(s, dtype=np.int32)
+    pos_row[-5:] = -1  # padded q tail
+    pos = jnp.asarray(np.broadcast_to(pos_row, (b, s)))
+    mem_row = np.arange(m, dtype=np.int32)
+    mem_row[-2:] = -1  # padded memory slots
+    mpos = jnp.asarray(np.broadcast_to(mem_row, (b, m)))
+
+    def loss(xx, mm, bk, mode):
+        out, _ = attention(
+            p, xx, n_heads=h, n_kv_heads=kv, head_dim=hd, q_pos=pos,
+            memory=mm, mem_pos=mpos, mode=mode, backend=bk,
+        )
+        return jnp.sum(out * out), out
+
+    for mode in ("train", "prefill"):
+        res = {}
+        for name, bk in (("fused", Backend.all_fused()),
+                         ("ref", Backend.all_reference())):
+            (_, out), g = jax.value_and_grad(
+                loss, argnums=(0, 1), has_aux=True
+            )(x, mem, bk, mode)
+            res[name] = (out, *g)
+        for got, want in zip(res["fused"], res["ref"]):
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-3
+            )
+
+    # structural: fused cross fwd is ONE pallas_call, its VJP the usual
+    # fwd + fused one-pass backward pair
+    bk = Backend.all_fused()
+    fwd_jx = jax.make_jaxpr(lambda xx: loss(xx, mem, bk, "train")[0])(x)
+    grad_jx = jax.make_jaxpr(jax.grad(lambda xx: loss(xx, mem, bk, "train")[0]))(x)
+    assert count_pallas_calls(fwd_jx) == 1
+    assert count_pallas_calls(grad_jx) == 2
+
+
 def test_rope_preserves_norm_and_relative_position():
     x = jax.random.normal(jax.random.PRNGKey(5), (1, 8, 2, 16))
     pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
