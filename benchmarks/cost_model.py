@@ -35,13 +35,16 @@ hbm_bytes_per_step / mxu_flops_per_step regressed >5% vs the committed file.
 """
 from __future__ import annotations
 
-import itertools
-import math
 import os
 import sys
-from typing import Dict, Iterable, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
+
+# THE grid walker — shared with repro.analysis (the contract checker's
+# revisit-race detector replays the same geometry the same way; keeping a
+# second walker here is exactly the drift the analysis pass exists to catch)
+from repro.analysis.replay import _blk_bytes, replay_dma  # noqa: F401
 
 # One canonical config for both writing the BENCH record and the regression
 # check — matches bench_overhead.packed_attention's full (non-fast) shape so
@@ -56,39 +59,6 @@ ATTN_CONFIG_FAST = dict(ATTN_CONFIG, B=1, S=256, H=4, KV=2, D=32,
 FLAT_CONFIG = dict(params="oracle.hostile_params", state_dtype="float32",
                    elem_bytes=4, optimizers=("flat_vr_scale", "flat_vr_adam",
                                              "flat_vr_lamb", "flat_vr_lars"))
-
-
-def _blk_bytes(spec, elem_bytes: int) -> int:
-    return int(math.prod(spec.block_shape)) * elem_bytes
-
-
-def replay_dma(grid: Tuple[int, ...],
-               operands: Iterable[Tuple[str, object, int, bool]],
-               extra: Tuple = ()) -> Dict[str, dict]:
-    """Walk ``grid`` row-major calling each operand's REAL index map with
-    concrete indices; count a block visit whenever the returned index
-    differs from the previous grid step (the Mosaic DMA-elision rule).
-
-    operands: (name, BlockSpec, elem_bytes, is_output).  Outputs cost a
-    fetch AND a write-back per visit (2x bytes).  ``extra`` is appended to
-    every index-map call (the scalar-prefetch fetch array).
-    """
-    ops = list(operands)
-    prev: Dict[str, tuple] = {}
-    visits = {name: 0 for name, *_ in ops}
-    for idx in itertools.product(*(range(n) for n in grid)):
-        for name, spec, _, _ in ops:
-            bi = tuple(int(x) for x in spec.index_map(*idx, *extra))
-            if bi != prev.get(name):
-                visits[name] += 1
-                prev[name] = bi
-    return {
-        name: {
-            "visits": visits[name],
-            "bytes": visits[name] * _blk_bytes(spec, eb) * (2 if out else 1),
-        }
-        for name, spec, eb, out in ops
-    }
 
 
 def _total_bytes(rep: Dict[str, dict]) -> int:

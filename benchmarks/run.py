@@ -86,6 +86,22 @@ def check_regression() -> int:
     failures = cost_model.check_regression(committed)
     for msg in failures:
         print(f"# REGRESSION: {msg}", file=sys.stderr)
+
+    # the kernel contract checker rides the same gate: the cost model and
+    # the analyzer replay the SAME registered geometries (analysis.replay),
+    # so a BlockSpec change that passes the byte counts but breaks a layout
+    # / revisit / fetch / VMEM contract still fails here.  Fast mode:
+    # representative configs, no launch tracing (the full pass runs in
+    # tests/test_analysis.py and `python -m repro.analysis.check`).
+    from repro.analysis.check import run_checks
+
+    contract_findings = run_checks(fast=True)
+    for f in contract_findings:
+        print(f"# CONTRACT: {f}", file=sys.stderr)
+        failures.append(str(f))
+    if not contract_findings:
+        print("# kernel contract check OK (fast pass)")
+
     if not failures:
         fresh = committed["cost_model"]
         print("# cost-model regression check OK "

@@ -1,0 +1,24 @@
+"""Static analysis of the repo's Pallas kernels (the kernel contract checker).
+
+The hardware-facing invariants that make the fused kernels correct on a real
+TPU — output-window re-fetch on non-consecutive revisits, PHASE_WINDOWS
+parked-block safety, dtype-derived sublane multiples, scalar-prefetch
+fetch-map soundness, VMEM working-set budgets — used to live as prose
+"Mosaic checklists" in docs/.  This package machine-checks them:
+
+  layout_contracts   LANE / sublane(dtype) / VMEM budget — the single source
+                     of truth for tiling constants (core/layout.py and the
+                     kernels import from here)
+  replay             the grid index-map walker (shared with
+                     benchmarks.cost_model — one walker, two consumers)
+  registry           per-kernel registration: grid builders, BlockSpecs,
+                     declared contracts, representative + hostile configs
+  rules              the checks themselves, each with a stable rule ID
+  launch_manifest    compiled-fn -> expected pallas_call count (consumed by
+                     tests AND the analyzer)
+  check              ``python -m repro.analysis.check [--fast]`` entry point
+
+Import discipline: core/layout.py imports ``layout_contracts`` at module
+import, so this ``__init__`` must stay empty of eager imports (no jax, no
+repro submodules) to avoid cycles.  See docs/analysis.md.
+"""

@@ -1,0 +1,72 @@
+"""``python -m repro.analysis.check [--fast]`` — the kernel contract gate.
+
+Runs every rule in repro.analysis.rules over every registered kernel
+(registry.all_kernels) at every config, prints the findings, and exits
+nonzero if any.  ``--fast`` skips the hostile-config replay sweep AND the
+launch-manifest tracing (pure geometry replay + layout/fetch/VMEM/oracle
+checks only, well under a second) — that's the mode benchmarks.run wires
+into ``--check-regression``; the full pass runs in tier-1 pytest
+(tests/test_analysis.py) and in CI via this CLI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis.layout_contracts import VMEM_BUDGET_BYTES
+
+
+def run_checks(fast: bool = False, budget: Optional[int] = None) -> List:
+    """All findings over the full registry; empty list == contracts hold."""
+    from repro.analysis import launch_manifest, registry, rules
+
+    budget = VMEM_BUDGET_BYTES["tpu"] if budget is None else budget
+    findings: List = []
+    for kspec in registry.all_kernels().values():
+        findings += rules.check_oracle(kspec)
+        for cname, cfg in sorted(kspec.configs.items()):
+            if fast and cname.startswith("hostile"):
+                continue
+            try:
+                geom = kspec.build(**cfg)
+            except Exception as e:  # noqa: BLE001 — a broken builder is a finding
+                findings.append(rules.Finding(
+                    "LAYOUT-RANK", kspec.name, cname,
+                    f"geometry builder raised {type(e).__name__}: {e}"))
+                continue
+            findings += rules.check_geometry(kspec.name, cname, geom, budget)
+    if not fast:
+        findings += launch_manifest.check_launches()
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="static verification of the repo's Pallas kernel contracts",
+    )
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the hostile-config replay sweep and launch tracing")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import registry
+
+    kernels = registry.all_kernels()
+    n_cfg = sum(1 for k in kernels.values()
+                for c in k.configs if not (args.fast and c.startswith("hostile")))
+    findings = run_checks(fast=args.fast)
+    for f in findings:
+        print(f"# CONTRACT: {f}", file=sys.stderr)
+    if findings:
+        print(f"# {len(findings)} contract violation(s) across "
+              f"{len(kernels)} kernels", file=sys.stderr)
+        return 1
+    mode = "fast (representative configs only)" if args.fast else "full"
+    print(f"# kernel contracts OK: {len(kernels)} kernels, {n_cfg} configs, "
+          f"{mode} pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

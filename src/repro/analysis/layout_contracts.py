@@ -1,0 +1,47 @@
+"""TPU Mosaic tiling constants — the single source of truth.
+
+Every kernel (and core/layout.py) routes its lane width and sublane
+multiples through here instead of hard-coding ``128`` / ``8``; the analyzer
+(rules.LAYOUT-SUBLANE) checks registered BlockSpecs against the SAME
+``sublane(dtype)``, so a kernel and its checker cannot disagree.
+
+The sublane rule is the Mosaic packed-tile rule: a native tile is
+(32 // itemsize, 128) — (8, 128) for f32, (16, 128) for bf16/f16,
+(32, 128) for int8/fp8.  A hard-coded 8 hands Mosaic a half-height bf16
+tile (the exact flash_decode bug PR 7 fixed).
+
+Import discipline: numpy only (jax lazily, as a dtype-name fallback) —
+core/layout.py imports this module at import time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+LANE = 128  # TPU lane width (last-dim tile)
+MIN_TILE_RANK = 2  # Mosaic operand tiles must keep >= 2 dims
+
+# Per-platform VMEM working-set budget for one kernel instance: operand
+# windows are double-buffered by the pipeline, scratch is resident.  16 MiB
+# is the v4/v5 per-core VMEM size; the analyzer's VMEM-BUDGET rule fails a
+# kernel whose (2 * block windows + scratch) exceeds it.
+VMEM_BUDGET_BYTES = {"tpu": 16 * 2**20}
+DOUBLE_BUFFER = 2
+
+
+def itemsize(dtype) -> int:
+    """Byte width of ``dtype`` (name, numpy dtype, or jax dtype)."""
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:
+        import jax.numpy as jnp  # registers bfloat16 & friends with numpy
+
+        return jnp.dtype(dtype).itemsize
+
+
+def sublane(dtype) -> int:
+    """Min sublane count (second-to-last tile dim) for ``dtype``:
+    32 // itemsize — f32 -> 8, bf16/f16 -> 16, int8/fp8 -> 32."""
+    return 32 // itemsize(dtype)
+
+
+SUBLANE_F32 = sublane(np.float32)  # == 8; the flat-buffer row granule

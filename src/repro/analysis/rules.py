@@ -1,0 +1,284 @@
+"""The contract checks.  Each has a stable rule ID (asserted by the
+mutation tests in tests/test_analysis.py and referenced from the Mosaic
+checklists in docs/) and produces ``Finding`` records, never exceptions —
+the checker reports everything it can see in one pass.
+
+Revisit rules (replaying the real index maps via analysis.replay):
+
+  REVISIT-RACE   an OUTPUT block whose index recurs non-consecutively
+                 within its live phases must be declared
+                 ``accumulate=True`` (Mosaic re-fetches the output window
+                 on revisit; without the declaration the earlier write is
+                 presumed lost — dq in the fused backward, the stashed
+                 ``upd`` of the 3-phase flat kernels)
+  REVISIT-PARK   an INPUT with a declared phase window must hold a CONSTANT
+                 block index through every out-of-window segment (parked =
+                 zero DMA; a drifting index means the kernel re-fetches
+                 blocks in phases it never reads them)
+  REVISIT-WRITE  parked-output safety: constant index while parked (a
+                 parked window is never written, so its departure write-back
+                 must restore the exact bytes it fetched — impossible if the
+                 window moved) and an index CHANGE at every live->parked
+                 transition (the change forces the final write-back; an
+                 elided one strands the last written block in VMEM)
+
+Layout rules (static, from BlockSpec shapes + declared dtypes):
+
+  LAYOUT-RANK     every operand block keeps >= MIN_TILE_RANK dims (and a
+                  "tile" role must survive squeezing its 1-dims)
+  LAYOUT-SUBLANE  a tile's squeezed sublane dim is a multiple of
+                  layout_contracts.sublane(dtype) — no hard-coded 8
+  LAYOUT-ROW      pos/seg operands are (1, block) int32 rows
+  LAYOUT-LSE      LSE/delta residuals are (1, 1, block_q) f32
+
+Fetch-map rules (concrete scalar-prefetch arrays):
+
+  FETCH-BOUNDS    every fetch index in [0, n_blocks)
+  FETCH-FILL      monotone nondecreasing forward-fill along the kv axis;
+                  fetch[ik] == ik exactly on live tiles (rows with at least
+                  one live tile); all-dead rows fetch one constant block
+  FETCH-IDENTITY  a dense non-causal grid's static map is the identity
+
+Resource / metadata rules:
+
+  VMEM-BUDGET   sum of double-buffered operand windows + scratch within the
+                per-platform VMEM budget
+  ORACLE-REF    the registered jnp oracle resolves to a callable
+  LAUNCH-COUNT  traced pallas_call counts match analysis.launch_manifest
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import List
+
+import numpy as np
+
+from repro.analysis.layout_contracts import (
+    DOUBLE_BUFFER,
+    MIN_TILE_RANK,
+    VMEM_BUDGET_BYTES,
+    itemsize,
+    sublane,
+)
+from repro.analysis.registry import Geometry, KernelSpec, Operand
+from repro.analysis.replay import _blk_bytes, grid_steps, replay_indices
+
+RULES = {
+    "REVISIT-RACE": "non-consecutive output revisit must be declared accumulate-through-window",
+    "REVISIT-PARK": "input parked outside its phase window must hold a constant block index",
+    "REVISIT-WRITE": "parked output never written: constant index while parked, index change at live->parked",
+    "LAYOUT-RANK": f"operand tiles keep >= {MIN_TILE_RANK} dims",
+    "LAYOUT-SUBLANE": "tile sublane dim is a multiple of sublane(dtype) — dtype-derived, not 8",
+    "LAYOUT-ROW": "pos/seg operands are (1, block) int32",
+    "LAYOUT-LSE": "LSE/delta residuals are (1, 1, block_q) f32",
+    "FETCH-BOUNDS": "scalar-prefetch fetch indices in [0, n_blocks)",
+    "FETCH-FILL": "fetch map is a monotone forward-fill; self-fetch exactly on live tiles",
+    "FETCH-IDENTITY": "dense non-causal static fetch map is the identity",
+    "VMEM-BUDGET": "double-buffered operand windows + scratch fit the per-platform VMEM budget",
+    "ORACLE-REF": "every registered kernel names a resolvable jnp oracle",
+    "LAUNCH-COUNT": "traced pallas_call counts match analysis.launch_manifest",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    kernel: str
+    config: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.kernel}/{self.config}: {self.detail}"
+
+
+# ---------------------------------------------------------------------------
+# layout contracts (static)
+# ---------------------------------------------------------------------------
+
+
+def _layout_findings(kernel: str, config: str, name: str, op: Operand) -> List[Finding]:
+    bs = tuple(int(d) for d in op.spec.block_shape)
+    mk = lambda rule, detail: Finding(rule, kernel, config, f"operand {name!r}: {detail}")
+    if len(bs) < MIN_TILE_RANK:
+        return [mk("LAYOUT-RANK", f"block shape {bs} has rank {len(bs)} < {MIN_TILE_RANK} "
+                   "— Mosaic iota/tiling needs >= 2 dims")]
+    if op.role == "tile":
+        sq = [d for d in bs if d != 1]
+        if len(sq) < 2:
+            return [mk("LAYOUT-RANK", f"tile block {bs} squeezes to rank {len(sq)} < 2")]
+        sub = sublane(op.dtype)
+        if sq[-2] % sub:
+            return [mk("LAYOUT-SUBLANE",
+                       f"sublane dim {sq[-2]} of block {bs} is not a multiple of "
+                       f"{sub} (= sublane({op.dtype})) — a half-height tile for this dtype")]
+    elif op.role == "row":
+        if len(bs) != 2 or bs[0] != 1 or op.dtype != "int32":
+            return [mk("LAYOUT-ROW", f"expected a (1, block) int32 row, got block {bs} {op.dtype}")]
+    elif op.role == "lse":
+        if len(bs) != 3 or bs[:2] != (1, 1) or op.dtype != "float32":
+            return [mk("LAYOUT-LSE", f"expected a (1, 1, block_q) f32 residual, got block {bs} {op.dtype}")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# revisit races & phase-window parking (replayed)
+# ---------------------------------------------------------------------------
+
+
+def _revisit_findings(kernel: str, config: str, name: str, op: Operand,
+                      is_out: bool, seq: List[tuple], live: List[bool]) -> List[Finding]:
+    findings: List[Finding] = []
+    mk = lambda rule, detail: Finding(rule, kernel, config, f"operand {name!r}: {detail}")
+    n = len(seq)
+
+    # parked segments hold a constant index (no DMA outside the window)
+    park_rule = "REVISIT-WRITE" if is_out else "REVISIT-PARK"
+    i = 0
+    while i < n:
+        if live[i]:
+            i += 1
+            continue
+        j = i
+        while j < n and not live[j]:
+            j += 1
+        if len(set(seq[i:j])) > 1:
+            findings.append(mk(park_rule,
+                               f"block index changes inside the parked segment (steps {i}..{j - 1}: "
+                               f"{sorted(set(seq[i:j]))[:4]}...) — outside its phase window the "
+                               "index map must park (constant index, zero DMA)"))
+            break
+        i = j
+
+    # a live->parked transition must change the index: the change forces the
+    # output's departure write-back at the phase boundary
+    if is_out and op.window is not None:
+        for i in range(n - 1):
+            if live[i] and not live[i + 1] and seq[i] == seq[i + 1]:
+                findings.append(mk("REVISIT-WRITE",
+                                   f"live->parked transition at step {i} keeps block index "
+                                   f"{seq[i]} — the elided write-back strands the last written "
+                                   "block in VMEM"))
+                break
+
+    # output revisit race: a block index recurring NON-consecutively within
+    # the live steps needs the accumulate-through-window declaration
+    if is_out and not op.accumulate:
+        runs: dict = {}
+        prev = None
+        for i in range(n):
+            if not live[i]:
+                prev = None
+                continue
+            if seq[i] != prev:
+                runs[seq[i]] = runs.get(seq[i], 0) + 1
+                prev = seq[i]
+        revisited = sorted(b for b, c in runs.items() if c > 1)
+        if revisited:
+            findings.append(mk("REVISIT-RACE",
+                               f"block(s) {revisited[:4]} revisited non-consecutively without an "
+                               "accumulate-through-window declaration — Mosaic must re-fetch the "
+                               "output window on revisit or the earlier write is lost"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# fetch-map soundness (concrete scalar-prefetch arrays)
+# ---------------------------------------------------------------------------
+
+
+def _fetch_findings(kernel: str, config: str, name: str, fm) -> List[Finding]:
+    findings: List[Finding] = []
+    mk = lambda rule, detail: Finding(rule, kernel, config, f"fetch map {name!r}: {detail}")
+    fetch = np.asarray(fm.fetch)
+    if fetch.size == 0:
+        return [mk("FETCH-BOUNDS", "empty fetch array")]
+    if fetch.min() < 0 or fetch.max() >= fm.n_blocks:
+        return findings + [mk("FETCH-BOUNDS",
+                              f"indices span [{fetch.min()}, {fetch.max()}] outside "
+                              f"[0, {fm.n_blocks}) — a kv map would fetch out of bounds")]
+    if np.any(np.diff(fetch, axis=-1) < 0):
+        findings.append(mk("FETCH-FILL", "not monotone nondecreasing along the kv axis — "
+                           "a backward jump re-fetches an already-departed block mid-row"))
+    if fm.live is not None:
+        live = np.asarray(fm.live, bool)
+        ik = np.arange(fetch.shape[-1])
+        self_fetch = fetch == ik
+        has_live = live.any(axis=-1, keepdims=True)
+        if np.any((self_fetch != live) & has_live):
+            findings.append(mk("FETCH-FILL",
+                               "fetch[ik] == ik must hold exactly on live tiles — the kernel's "
+                               "liveness predicate IS the self-fetch test, so a mismatch runs "
+                               "compute on a stale window or skips a live tile"))
+        dead_const = np.all(fetch == fetch[..., :1], axis=-1, keepdims=True)
+        if np.any(~has_live & ~dead_const):
+            findings.append(mk("FETCH-FILL", "an all-dead row must fetch one constant block"))
+    if fm.dense_identity:
+        ident = np.broadcast_to(np.arange(fetch.shape[-1], dtype=fetch.dtype), fetch.shape)
+        if not np.array_equal(fetch, ident):
+            findings.append(mk("FETCH-IDENTITY",
+                               "dense non-causal grid: the static fetch map must be the "
+                               "identity (every tile live, every step self-fetching)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# VMEM footprint
+# ---------------------------------------------------------------------------
+
+
+def _vmem_findings(kernel: str, config: str, geom: Geometry, budget: int) -> List[Finding]:
+    window_bytes = sum(_blk_bytes(op.spec, itemsize(op.dtype))
+                       for _, op, _ in geom.operands())
+    total = DOUBLE_BUFFER * window_bytes + geom.scratch_bytes
+    if total <= budget:
+        return []
+    return [Finding("VMEM-BUDGET", kernel, config,
+                    f"estimated working set {total:,} B ({DOUBLE_BUFFER}x {window_bytes:,} B "
+                    f"operand windows + {geom.scratch_bytes:,} B scratch) exceeds the "
+                    f"{budget:,} B VMEM budget")]
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def check_geometry(kernel: str, config: str, geom: Geometry,
+                   budget: int = VMEM_BUDGET_BYTES["tpu"]) -> List[Finding]:
+    """All geometry-level rules for one (kernel, config) launch."""
+    findings: List[Finding] = []
+    steps = list(grid_steps(geom.grid))
+    for name, op, is_out in geom.operands():
+        findings += _layout_findings(kernel, config, name, op)
+        seq = replay_indices(geom.grid, op.spec, geom.extra)
+        if op.window is None or geom.phase_axis is None:
+            live = [True] * len(steps)
+        else:
+            lo, hi = op.window
+            ax = geom.phase_axis
+            live = [lo <= s[ax] <= hi for s in steps]
+        findings += _revisit_findings(kernel, config, name, op, is_out, seq, live)
+    for name, fm in geom.fetch_maps.items():
+        findings += _fetch_findings(kernel, config, name, fm)
+    findings += _vmem_findings(kernel, config, geom, budget)
+    return findings
+
+
+def check_oracle(kspec: KernelSpec) -> List[Finding]:
+    """ORACLE-REF: the registered jnp oracle exists and is callable."""
+    if not kspec.oracle:
+        return [Finding("ORACLE-REF", kspec.name, "-",
+                        "kernel registered without a jnp oracle — every fused kernel "
+                        "needs an allclose target in repro.kernels.ref")]
+    mod_name, _, attr = kspec.oracle.rpartition(".")
+    mod_name = mod_name or "repro.kernels.ref"
+    try:
+        fn = getattr(importlib.import_module(mod_name), attr, None)
+    except ImportError:
+        fn = None
+    if not callable(fn):
+        return [Finding("ORACLE-REF", kspec.name, "-",
+                        f"oracle {kspec.oracle!r} does not resolve to a callable "
+                        f"in {mod_name}")]
+    return []

@@ -42,8 +42,11 @@ import numpy as np
 
 PyTree = Any
 
-LANE = 128  # TPU lane width (last-dim tile)
-SUBLANE = 8  # f32 sublane (second-to-last-dim tile)
+# tile geometry from the shared layout-contract constants (LAYOUT-SUBLANE:
+# the sublane count is dtype-derived, 8 only for the f32 buffers used here)
+from repro.analysis.layout_contracts import LANE, sublane
+
+SUBLANE = sublane(np.float32)  # f32 sublane (second-to-last-dim tile)
 FLAT_BLOCK_ROWS = 64  # rows per grid block: (64, 128) f32 = 32 KiB per ref
 
 

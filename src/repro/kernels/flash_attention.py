@@ -604,3 +604,82 @@ def flash_attention(
     return _flash_fn(causal, window, block_q, block_k, interpret, implicit)(
         q, k, v, q_pos, k_pos, q_seg, k_seg
     )
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis): the forward geometry replayed with
+# a REAL fetch map (kv_fetch_blocks on packed configs, static_fetch_blocks
+# on the implicit layout) as the scalar-prefetch extra
+# ---------------------------------------------------------------------------
+
+
+def _analysis_positions(b: int, s: int, docs) -> np.ndarray:
+    """(B, S) int32 packed positions: per-doc aranges, -1 tail padding."""
+    row = np.full(s, -1, np.int32)
+    i = 0
+    for n in docs:
+        row[i:i + n] = np.arange(n)
+        i += n
+    return np.tile(row, (b, 1))
+
+
+def _analysis_geometry(B, S, H, KV, D, *, causal=True, window=0, docs=None,
+                       dtype="float32", block_q=DEFAULT_BLOCK_Q,
+                       block_k=DEFAULT_BLOCK_K):
+    from repro.analysis.registry import FetchMap, Geometry, Operand
+
+    bq, bk = min(block_q, S), min(block_k, S)
+    grid, nq, nk, _, ins, outs = fwd_geometry(
+        B, S, H, D, S, KV, block_q=bq, block_k=bk, with_lse=True)
+    if docs is not None:
+        qp, kp, qs, ks = resolve_positions(
+            jnp.asarray(_analysis_positions(B, S, docs)),
+            jnp.asarray(_analysis_positions(B, S, docs)), S, S)
+        fetch, live = kv_fetch_blocks(qp, kp, qs, ks, causal=causal,
+                                      window=window, block_q=bq, block_k=bk)
+        fetch, live = np.asarray(fetch), np.asarray(live)
+        fm = FetchMap(fetch, live=live, n_blocks=nk)
+    else:
+        fetch = np.broadcast_to(
+            static_fetch_blocks(nq, nk, bq, bk, causal, window), (B, nq, nk))
+        fm = FetchMap(fetch, n_blocks=nk,
+                      dense_identity=not causal and window == 0)
+
+    def op(name, spec):
+        if name in ("q_pos", "k_pos", "q_seg", "k_seg"):
+            return Operand(spec, dtype="int32", role="row")
+        if name == "lse":
+            return Operand(spec, dtype="float32", role="lse")
+        return Operand(spec, dtype=dtype)
+
+    return Geometry(
+        grid=grid,
+        ins={n: op(n, s) for n, s in ins.items()},
+        outs={n: op(n, s) for n, s in outs.items()},
+        scratch_bytes=4 * (bq + bq + bq * D),
+        extra=(fetch.reshape(-1),),
+        fetch_maps={"kv": fm},
+    )
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    register_kernel(
+        "flash_attention_fwd",
+        module=__name__,
+        oracle="attention_fwd_ref",
+        build=_analysis_geometry,
+        configs={
+            "representative": dict(B=2, S=512, H=8, KV=2, D=64,
+                                   causal=True, docs=(256, 170, 54)),
+            "hostile_packed_bf16": dict(B=1, S=130, H=4, KV=2, D=32,
+                                        causal=True, docs=(70, 41, 19),
+                                        dtype="bfloat16"),
+            "hostile_dense_identity": dict(B=1, S=256, H=2, KV=2, D=64,
+                                           causal=False, docs=None),
+        },
+    )
+
+
+_register()

@@ -55,6 +55,8 @@ from jax.experimental.pallas import tpu as pltpu
 # p = exp(s - lse) is only valid against the exact mask the forward's lse was
 # built under
 from repro.kernels.flash_attention import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
     NEG_INF,
     _load_pos_seg,
     _maybe_skip_dead_tile,
@@ -271,3 +273,54 @@ def attention_bwd_ref(
     dq = jnp.einsum("bkgqs,bskd->bqkgd", ds, kf).reshape(b, sq, h, d)
     dk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qf)
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis): the fused backward's dq is THE
+# canonical accumulate-through-window output — its q block recurs for every
+# kv step, non-consecutively, and Mosaic must re-fetch it each revisit
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(B, S, H, KV, D, *, dtype="float32",
+                       block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    from repro.analysis.registry import Geometry, Operand
+
+    bq, bk = min(block_q, S), min(block_k, S)
+    grid, _, _, _, ins, outs = bwd_geometry(B, S, H, D, S, KV,
+                                            block_q=bq, block_k=bk)
+
+    def op(name, spec):
+        if name in ("q_pos", "k_pos", "q_seg", "k_seg"):
+            return Operand(spec, dtype="int32", role="row")
+        if name in ("lse", "delta"):
+            return Operand(spec, dtype="float32", role="lse")
+        if name == "dq":
+            return Operand(spec, dtype="float32", accumulate=True)
+        return Operand(spec, dtype="float32" if name == "dq" else dtype)
+
+    return Geometry(
+        grid=grid,
+        ins={n: op(n, s) for n, s in ins.items()},
+        outs={n: op(n, s) for n, s in outs.items()},
+        scratch_bytes=2 * bk * D * 4,
+    )
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    register_kernel(
+        "flash_attention_bwd",
+        module=__name__,
+        oracle="repro.kernels.flash_attention_bwd.attention_bwd_ref",
+        build=_analysis_geometry,
+        configs={
+            "representative": dict(B=2, S=512, H=8, KV=2, D=64),
+            "hostile_gqa_bf16": dict(B=1, S=130, H=4, KV=1, D=32,
+                                     dtype="bfloat16"),
+        },
+    )
+
+
+_register()

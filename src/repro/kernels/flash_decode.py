@@ -33,12 +33,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.layout_contracts import sublane as _sublane
 from repro.kernels.flash_attention import DEFAULT_BLOCK_K, _fwd_call
-
-def _sublane(dtype) -> int:
-    """Min sublane count of the q tile for ``dtype``: 32 // itemsize (f32 ->
-    8, bf16/f16 -> 16, int8/fp8 -> 32) — the Mosaic packed-tile rule."""
-    return 32 // jnp.dtype(dtype).itemsize
 
 
 @functools.partial(
@@ -91,3 +87,74 @@ def flash_decode(
         interpret=interpret, with_lse=False, implicit=False,
     )[0]
     return out[:, :l]
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis): decode replayed over a synthetic
+# paged cache — 2 interleaved segments in arrival order, a fill cursor with
+# empty slots behind it, idle query lanes — at the dtype-derived lane
+# padding (this geometry is exactly the PR-7 bf16 half-tile fix, now gated)
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(B, L, C, H, KV, D, *, dtype="float32",
+                       block_k=DEFAULT_BLOCK_K):
+    import numpy as np
+
+    from repro.analysis.registry import FetchMap, Geometry, Operand
+    from repro.kernels.flash_attention import fwd_geometry, kv_fetch_blocks
+
+    lp = -(-L // _sublane(dtype)) * _sublane(dtype)
+    bk = min(block_k, C)
+    grid, _, nk, _, ins, outs = fwd_geometry(
+        B, lp, H, D, C, KV, block_q=lp, block_k=bk, with_lse=False)
+
+    # arrival-ordered cache: slots alternate between two segments up to the
+    # fill cursor, then sit empty (pos/seg -1); queries are the next token
+    # of each segment on the first lanes, idle (-1) lanes after
+    fill = (2 * C) // 3
+    kp = np.full((B, C), -1, np.int32)
+    ks = np.full((B, C), -1, np.int32)
+    kp[:, :fill] = np.arange(fill) // 2
+    ks[:, :fill] = np.arange(fill) % 2
+    qp = np.full((B, lp), -1, np.int32)
+    qs = np.full((B, lp), -1, np.int32)
+    n_live = min(L, 2)
+    qp[:, :n_live] = fill // 2
+    qs[:, :n_live] = np.arange(n_live)
+    fetch, live = kv_fetch_blocks(
+        jnp.asarray(qp), jnp.asarray(kp), jnp.asarray(qs), jnp.asarray(ks),
+        causal=True, window=0, block_q=lp, block_k=bk)
+    fetch, live = np.asarray(fetch), np.asarray(live)
+
+    def op(name, spec):
+        if name in ("q_pos", "k_pos", "q_seg", "k_seg"):
+            return Operand(spec, dtype="int32", role="row")
+        return Operand(spec, dtype=dtype)
+
+    return Geometry(
+        grid=grid,
+        ins={n: op(n, s) for n, s in ins.items()},
+        outs={n: op(n, s) for n, s in outs.items()},
+        scratch_bytes=4 * (lp + lp + lp * D),
+        extra=(fetch.reshape(-1),),
+        fetch_maps={"kv": FetchMap(fetch, live=live, n_blocks=nk)},
+    )
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    register_kernel(
+        "flash_decode",
+        module=__name__,
+        oracle="decode_attention_ref",
+        build=_analysis_geometry,
+        configs={
+            "representative": dict(B=4, L=4, C=256, H=8, KV=2, D=64),
+            "hostile_bf16_lanes": dict(B=2, L=3, C=130, H=4, KV=2, D=32,
+                                       dtype="bfloat16"),
+        },
+    )
+
+
+_register()

@@ -280,3 +280,82 @@ def vr_lars_compute(g, ga, g2, w, scal, racc, lids, invsz, layout: ParamLayout,
         out_shape=(sds, acc_sds, acc_sds),
         interpret=interpret,
     )(lids, invsz, racc, g, ga, g2, w, scal)
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis): single-phase per-shard launches —
+# the replay PROVES the accumulator outputs' constant index maps give
+# consecutive revisits (the safe accumulate-in-VMEM pattern), so none of
+# them needs an accumulate-through-window declaration
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(kname: str, *, layout_kind: str = "hostile",
+                       state_dtype: str = "float32"):
+    from repro.analysis.registry import Geometry, Operand, demo_layout
+
+    layout = demo_layout(layout_kind)
+    blk, lid, acc, inv, scal = _specs(layout)
+    f32 = lambda spec: Operand(spec, dtype="float32")
+    sd = lambda spec: Operand(spec, dtype=state_dtype)
+    meta = {
+        "lid": Operand(lid, dtype="int32", role="meta"),
+        "inv": Operand(inv, dtype="float32", role="meta"),
+    }
+    grid = (layout.n_blocks,)
+    if kname == "spmd_leaf_r_partials":
+        return Geometry(grid=grid,
+                        ins={"lid": meta["lid"], "g": f32(blk), "g2": f32(blk)},
+                        outs={"racc": f32(acc)})
+    racc = {"racc": f32(acc)}
+    if kname == "spmd_vr_scale_apply":
+        return Geometry(grid=grid,
+                        ins={**meta, **racc, "g": f32(blk), "ga": f32(blk),
+                             "g2": f32(blk)},
+                        outs={"sg": f32(blk), "r": f32(blk)})
+    scal_op = {"scal": Operand(scal, dtype="float32", role="meta")}
+    if kname == "spmd_vr_adam_apply":
+        return Geometry(grid=grid,
+                        ins={**meta, **racc, "g": f32(blk), "ga": f32(blk),
+                             "g2": f32(blk), "m": sd(blk), "v": sd(blk),
+                             "p": sd(blk), "w": sd(blk), **scal_op},
+                        outs={"upd": f32(blk), "m_out": sd(blk),
+                              "v_out": sd(blk), "p_out": sd(blk)})
+    if kname == "spmd_vr_lamb_compute":
+        return Geometry(grid=grid,
+                        ins={**meta, **racc, "g": f32(blk), "ga": f32(blk),
+                             "g2": f32(blk), "m": sd(blk), "v": sd(blk),
+                             "p": sd(blk), "w": sd(blk), **scal_op},
+                        outs={"u": f32(blk), "m_out": sd(blk), "v_out": sd(blk),
+                              "p_out": sd(blk), "uacc": f32(acc),
+                              "wacc": f32(acc)})
+    # spmd_vr_lars_compute
+    return Geometry(grid=grid,
+                    ins={**meta, **racc, "g": f32(blk), "ga": f32(blk),
+                         "g2": f32(blk), "w": sd(blk), **scal_op},
+                    outs={"u": f32(blk), "uacc": f32(acc), "wacc": f32(acc)})
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    oracles = {
+        "spmd_leaf_r_partials": "gsnr_r_raw_ref",
+        "spmd_vr_scale_apply": "vr_scale_ref",
+        "spmd_vr_adam_apply": "vr_adam_inner_ref",
+        "spmd_vr_lamb_compute": "vr_lamb_inner_ref",
+        "spmd_vr_lars_compute": "vr_lars_inner_ref",
+    }
+    for kname, oracle in oracles.items():
+        register_kernel(
+            kname, module=__name__, oracle=oracle,
+            build=functools.partial(_analysis_geometry, kname),
+            configs={
+                "representative": dict(layout_kind="aligned"),
+                "hostile_bf16_state": dict(layout_kind="hostile",
+                                           state_dtype="bfloat16"),
+            },
+        )
+
+
+_register()

@@ -178,3 +178,64 @@ def flat_vmap_moments(gstack, layout: ParamLayout, k: int, interpret: bool = Tru
         out_shape=(sds, sds),
         interpret=interpret,
     )(gstack)
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis)
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(kname: str, *, layout_kind: str = "hostile", k: int = 4):
+    from repro.analysis.registry import Geometry, Operand, demo_layout
+
+    layout = demo_layout(layout_kind)
+    blk = _blk(layout)
+    f32 = lambda spec: Operand(spec, dtype="float32")
+    inv = Operand(pl.BlockSpec((1, 1), lambda i: (0, 0)), role="meta")
+    if kname == "flat_moments_accum":
+        return Geometry(grid=(layout.n_blocks,),
+                        ins={"gs": f32(blk), "g2s": f32(blk), "g": f32(blk)},
+                        outs={"gs_out": f32(blk), "g2s_out": f32(blk)})
+    if kname == "flat_g_accum":
+        return Geometry(grid=(layout.n_blocks,),
+                        ins={"gs": f32(blk), "g": f32(blk)},
+                        outs={"gs_out": f32(blk)})
+    if kname == "flat_moments_finalize":
+        return Geometry(grid=(layout.n_blocks,),
+                        ins={"gs": f32(blk), "g2s": f32(blk), "inv": inv},
+                        outs={"mean": f32(blk), "sq": f32(blk)})
+    if kname == "flat_pack_square":
+        out = pl.BlockSpec((2, layout.block_rows, LANE), lambda i: (0, i, 0))
+        return Geometry(grid=(layout.n_blocks,),
+                        ins={"gf": f32(blk)}, outs={"payload": f32(out)})
+    # flat_vmap_moments: k-minor grid keeps output revisits consecutive —
+    # the registry replay PROVES that, no accumulate declaration needed
+    br = layout.block_rows
+    out_blk = pl.BlockSpec((br, LANE), lambda b, j: (b, 0))
+    return Geometry(grid=(layout.n_blocks, k),
+                    ins={"gstack": f32(pl.BlockSpec((1, br, LANE),
+                                                    lambda b, j: (j, b, 0)))},
+                    outs={"mean": f32(out_blk), "sq": f32(out_blk)})
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    oracles = {
+        "flat_moments_accum": "moments_accum_ref",
+        "flat_g_accum": "g_accum_ref",
+        "flat_moments_finalize": "moments_finalize_ref",
+        "flat_pack_square": "pack_square_ref",
+        "flat_vmap_moments": "vmap_moments_ref",
+    }
+    for kname, oracle in oracles.items():
+        configs = {"representative": dict(layout_kind="aligned"),
+                   "hostile_ragged": dict(layout_kind="hostile")}
+        if kname == "flat_vmap_moments":
+            configs["hostile_odd_k"] = dict(layout_kind="hostile", k=7)
+        register_kernel(kname, module=__name__, oracle=oracle,
+                        build=functools.partial(_analysis_geometry, kname),
+                        configs=configs)
+
+
+_register()

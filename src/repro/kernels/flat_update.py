@@ -460,3 +460,72 @@ def flat_vr_lars(
         scratch_shapes=[acc, acc, acc],
         interpret=interpret,
     )(lids, invsz, g, ga, g2, m, w, scal)
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis): replayable geometries built from
+# the SAME _specs/_phased_specs/PHASE_WINDOWS the launches above use
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(name: str, *, layout_kind: str = "hostile",
+                       state_dtype: str = "float32"):
+    from repro.analysis.registry import Geometry, Operand, demo_layout
+
+    layout = demo_layout(layout_kind)
+    pw = PHASE_WINDOWS[name]
+    n = pw["n_phases"]
+    pin, pout = _phased_specs(layout, name)
+    _, lid, inv, scal = _specs(layout)
+
+    # gradient streams and the f32 outputs stay f32; m/v/p/w ride state_dtype
+    def dt(stream):
+        return "float32" if stream in ("g", "ga", "g2", "upd", "sg", "r") else state_dtype
+
+    ins = {
+        "lid": Operand(lid, dtype="int32", role="meta"),
+        "inv": Operand(inv, dtype="float32", role="meta"),
+    }
+    for k, win in pw["ins"].items():
+        ins[k] = Operand(pin[k], dtype=dt(k), window=win)
+    if name != "flat_vr_scale":
+        ins["scal"] = Operand(scal, dtype="float32", role="meta")
+    outs = {
+        k: Operand(pout[k], dtype=dt(k), window=win, accumulate=win[1] > win[0])
+        for k, win in pw["outs"].items()
+    }
+    n_acc = 1 if n == 2 else 3
+    return Geometry(
+        grid=(n, layout.n_blocks),
+        ins=ins,
+        outs=outs,
+        scratch_bytes=n_acc * layout.leaf_slots * LANE * 4,
+        phase_axis=0,
+    )
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    oracles = {
+        "flat_vr_scale": "vr_scale_ref",
+        "flat_vr_adam": "vr_adam_inner_ref",
+        "flat_vr_lamb": "vr_lamb_inner_ref",
+        "flat_vr_lars": "vr_lars_inner_ref",
+    }
+    for kname in PHASE_WINDOWS:
+        register_kernel(
+            kname,
+            module=__name__,
+            oracle=oracles[kname],
+            build=functools.partial(_analysis_geometry, kname),
+            configs={
+                "representative": dict(layout_kind="aligned"),
+                "hostile_ragged": dict(layout_kind="hostile"),
+                "hostile_bf16_state": dict(layout_kind="hostile",
+                                           state_dtype="bfloat16"),
+            },
+        )
+
+
+_register()

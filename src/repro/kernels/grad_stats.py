@@ -97,3 +97,44 @@ def moments_finalize(gs2d, g2s2d, k, shape, interpret: bool = True):
         n *= d
     unpad = lambda x: x.reshape(-1)[:n].reshape(shape)
     return unpad(mean2d), unpad(sq2d)
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis)
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(kname: str, *, n: int = 300, g_dtype: str = "float32"):
+    from repro.analysis.registry import Geometry, Operand
+
+    grid, blk = _grid_blk(padded_rows(n))
+    f32 = lambda spec: Operand(spec, dtype="float32")
+    if kname == "grad_stats_accum":
+        return Geometry(grid=grid,
+                        ins={"gs": f32(blk), "g2s": f32(blk),
+                             "g": Operand(blk, dtype=g_dtype)},
+                        outs={"gs_out": f32(blk), "g2s_out": f32(blk)})
+    inv = Operand(pl.BlockSpec((1, 1), lambda i: (0, 0)), role="meta")
+    return Geometry(grid=grid,
+                    ins={"gs": f32(blk), "g2s": f32(blk), "inv": inv},
+                    outs={"mean": f32(blk), "sq": f32(blk)})
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    for kname, oracle in (("grad_stats_accum", "moments_accum_ref"),
+                          ("grad_stats_finalize", "moments_finalize_ref")):
+        register_kernel(
+            kname, module=__name__, oracle=oracle,
+            build=functools.partial(_analysis_geometry, kname),
+            configs={
+                # a small leaf fits one block; the hostile leaf spans a
+                # ragged multi-block grid (320 rows over 256-row blocks)
+                "representative": dict(n=300),
+                "hostile_multiblock_bf16": dict(n=40_000, g_dtype="bfloat16"),
+            },
+        )
+
+
+_register()

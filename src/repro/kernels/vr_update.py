@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANE = 128
+from repro.analysis.layout_contracts import LANE, sublane
+
 BLOCK_ROWS = 256  # (256, 128) f32 = 128 KiB per ref; ~0.5 MiB working set
 
 
@@ -37,9 +38,10 @@ def _kernel(g_ref, ga_ref, g2_ref, scal_ref, sg_ref, r_ref, *, gamma: float, eps
 
 def padded_rows(n: int) -> int:
     """Rows of the (rows x 128) f32 padded layout for an n-element leaf:
-    ceil(n / LANE) rounded up to the 8-row f32 sublane."""
+    ceil(n / LANE) rounded up to the f32 sublane multiple."""
     rows = -(-n // LANE)
-    return -(-rows // 8) * 8
+    sub = sublane(jnp.float32)
+    return -(-rows // sub) * sub
 
 
 def _pad2d(x: jnp.ndarray):

@@ -14,6 +14,7 @@ import pytest
 
 import oracle
 from repro import backend as backend_mod
+from repro.analysis.launch_manifest import LAUNCHES
 from repro.backend import Backend, resolve_backend
 from repro.configs.base import Config, OptimizerConfig, ParallelismConfig
 from repro.core import GradStats, grad_stats, make_optimizer
@@ -278,8 +279,9 @@ def test_attention_dispatch_follows_the_plan(fresh_shim):
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", DeprecationWarning)
         pc_old = dataclasses.replace(cfg.parallel, use_pallas=True)
-        assert n_calls(pc_old) == n_calls(pc_new) == 1
-    assert n_calls(dataclasses.replace(cfg.parallel, backend=Backend.all_reference())) == 0
+        assert n_calls(pc_old) == n_calls(pc_new) == LAUNCHES["model_forward_fused"]
+    assert n_calls(dataclasses.replace(cfg.parallel, backend=Backend.all_reference())) \
+        == LAUNCHES["model_forward_reference"]
 
 
 def test_spmd_plan_falls_back_on_single_device():
@@ -304,4 +306,5 @@ def test_spmd_plan_falls_back_on_single_device():
 
     state = opt.init(params)
     jaxpr = jax.make_jaxpr(lambda s: opt.update(g, s, params, stats=stats))(state)
-    assert count_pallas_calls(jaxpr) == 1  # gathered single launch preserved
+    # gathered single launch preserved
+    assert count_pallas_calls(jaxpr) == LAUNCHES["flat_update"]

@@ -48,6 +48,7 @@ from repro.configs.base import OptimizerConfig
 from repro.core import grad_stats, make_optimizer
 from repro.core.gsnr import GradStats
 from repro.core.layout import ParamLayout, is_flat
+from repro.analysis.launch_manifest import LAUNCHES
 from repro.kernels.ops import count_pallas_calls
 from repro.launch.mesh import compat_make_mesh
 from repro.sharding.rules import Rules
@@ -80,8 +81,8 @@ got = updates(aligned, plan)
 want = updates(aligned, None)
 for name in got:
     u_s, n_s = got[name]; u_g, n_g = want[name]
-    assert n_g == 1, (name, n_g)
-    assert n_s == 2, (name, n_s)  # partials + apply, per shard
+    assert n_g == LAUNCHES["flat_update"], (name, n_g)
+    assert n_s == LAUNCHES["spmd_update"], (name, n_s)  # partials + apply, per shard
     for a, b in zip(jax.tree_util.tree_leaves(u_s), jax.tree_util.tree_leaves(u_g)):
         if name == "vr_lars":  # trust*||w|| epilogue: fusion-order 1-ulp
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-10)
@@ -112,8 +113,8 @@ got = updates(bad, plan)
 want = updates(bad, None)
 for name in got:
     u_s, n_s = got[name]; u_g, n_g = want[name]
-    assert n_g == 1, (name, n_g)
-    assert n_s == 2, (name, n_s)  # remainder path is NOT a gathered fallback
+    assert n_g == LAUNCHES["flat_update"], (name, n_g)
+    assert n_s == LAUNCHES["spmd_update"], (name, n_s)  # remainder path is NOT a gathered fallback
     for a, b in zip(jax.tree_util.tree_leaves(u_s), jax.tree_util.tree_leaves(u_g)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-6, atol=1e-8)
 print("remainder sharded ok")
@@ -160,7 +161,7 @@ np.testing.assert_allclose(np.asarray(s_g.sq_mean.data), np.asarray(s_s.sq_mean.
                            rtol=1e-5, atol=2e-6)
 n_calls = count_pallas_calls(jax.make_jaxpr(
     lambda p, b: grad_stats(loss_fn, p, b, 4, backend=bk, spmd=plan)[2])(params2, (X, Y)))
-assert n_calls == 2, n_calls  # scan-body accum + finalize, sharded
+assert n_calls == LAUNCHES["spmd_grad_stats_scan"], n_calls  # scan-body accum + finalize, sharded
 print("sharded grad_stats ok")
 
 # --- stale (squares=False) g-only path stays flat and sharded: 1 launch
@@ -169,7 +170,7 @@ st = jax.jit(f_stale)(params2, (X, Y))
 assert is_flat(st.mean) and st.sq_mean is None
 np.testing.assert_allclose(
     np.asarray(st.mean.unpack()["w"]), np.asarray(s_g.mean.unpack()["w"]), rtol=1e-5, atol=2e-6)
-assert count_pallas_calls(jax.make_jaxpr(f_stale)(params2, (X, Y))) == 1
+assert count_pallas_calls(jax.make_jaxpr(f_stale)(params2, (X, Y))) == LAUNCHES["spmd_grad_stats_stale"]
 print("OK")
 """
 
@@ -180,6 +181,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.backend import Backend
 from repro.configs import get_smoke
 from repro.data import lm_batches
+from repro.analysis.launch_manifest import LAUNCHES
 from repro.kernels.ops import count_pallas_calls
 from repro.launch.mesh import compat_make_mesh
 from repro.sharding.rules import Rules, activate
@@ -212,8 +214,8 @@ for a, b in zip(jax.tree_util.tree_leaves(s1.params), jax.tree_util.tree_leaves(
 # gathered fused step is 6 launches (fused one-pass attention backward);
 # sharding splits stats(2)+update(1) into per-shard stats(2) +
 # update(partials+apply = 2): 7 total
-assert count_pallas_calls(jax.make_jaxpr(step_ref)(state, batch)) == 6
-assert count_pallas_calls(jax.make_jaxpr(step_spmd)(state, batch)) == 7
+assert count_pallas_calls(jax.make_jaxpr(step_ref)(state, batch)) == LAUNCHES["train_step_fused"]
+assert count_pallas_calls(jax.make_jaxpr(step_spmd)(state, batch)) == LAUNCHES["spmd_train_step"]
 print("OK")
 """
 
