@@ -6,19 +6,118 @@ encoder... actually by a small causal LM on the deterministic Markov stream
 grows — transfers directly).  Reports final eval loss and steps-to-target at
 each batch size with sqrt-scaled LR and a fixed token budget, so larger
 batches get proportionally fewer steps, exactly the paper's stressor.
+
+Second half: the autoscale A/B.  Fixed-k vs GSNR-driven batch autoscaling
+(train/autoscale.py) at MATCHED token budgets; the machine-readable record —
+including the measured B_simple and k trajectories — lands in
+BENCH_autoscale.json (schema in docs/autoscale.md).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
+import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import check_plans_agree, emit
+from repro.backend import resolve_backend
 from repro.configs import get_smoke
 from repro.core import sqrt_scaled_lr
 from repro.data import lm_batches
 from repro.train import eval_loss, make_loss_fn, train_loop
+from repro.train.autoscale import AutoscalePolicy, autoscale_train_loop
+
+BENCH_AUTOSCALE = os.path.join(os.path.dirname(__file__), "..", "BENCH_autoscale.json")
+
+
+def _autoscale_ab(cfg0, fast: bool) -> None:
+    """Fixed-k vs autoscaled at the same token budget, same model, same
+    stream.  The autoscaled arm must move k at least once from the MEASURED
+    B_simple — a run where the policy never fires is a vacuous A/B."""
+    seq = cfg0.seq_len
+    mb_rows, k0 = 4, 2
+    policy = AutoscalePolicy(
+        k_min=2, k_max=16, warmup_steps=3, cooldown=2, hysteresis=1.25, ema_beta=0.8
+    )
+    opt = dataclasses.replace(
+        cfg0.optimizer, name="vr_adam", lr=1e-3, schedule="constant",
+        warmup_steps=0, k=k0, base_batch=mb_rows * k0, lr_scale_rule="sqrt",
+    )
+    cfg = cfg0.replace(global_batch=mb_rows * k0, optimizer=opt)
+    mb_tokens = mb_rows * (seq - 1)  # lm_batches targets drop one position
+    budget = (20 if fast else 60) * k0 * mb_tokens
+
+    test_batches = [next(iter(lm_batches(cfg.model.vocab_size, 32, seq, seed=0,
+                                         stream_seed=888)))]
+    loss_fn = make_loss_fn(cfg)
+
+    # fixed-k arm: classic train_loop at effective batch k0*mb_rows
+    steps_fixed = budget // (k0 * mb_tokens)
+    stream = lm_batches(cfg.model.vocab_size, k0 * mb_rows, seq, seed=0, stream_seed=1)
+    t0 = time.time()
+    # log_every=steps records the first and last step (train_loop only
+    # appends history rows on log ticks)
+    state_f, hist_f = train_loop(cfg, stream, steps=steps_fixed, log_every=steps_fixed)
+    wall_fixed = time.time() - t0
+    te_fixed = eval_loss(cfg, loss_fn, state_f.params, test_batches)
+
+    # autoscaled arm: SAME microbatch stream geometry, token-budget stop
+    mbs = lm_batches(cfg.model.vocab_size, mb_rows, seq, seed=0, stream_seed=1)
+    t0 = time.time()
+    state_a, hist_a = autoscale_train_loop(
+        cfg, mbs, policy=policy, loss_fn=loss_fn, token_budget=budget
+    )
+    wall_auto = time.time() - t0
+    te_auto = eval_loss(cfg, loss_fn, state_a.params, test_batches)
+
+    ks = [row["k"] for row in hist_a]
+    n_changes = sum(1 for a, b in zip(ks, ks[1:]) if a != b) + (ks[0] != k0)
+    assert len(set(ks)) > 1 or n_changes >= 1, (
+        f"autoscale A/B is vacuous: k never moved from {k0} (trajectory {ks})"
+    )
+
+    emit("bert_autoscale_fixed", 0.0,
+         f"eval_loss={te_fixed:.4f};steps={steps_fixed};k={k0};tokens={budget}")
+    emit("bert_autoscale_auto", 0.0,
+         f"eval_loss={te_auto:.4f};steps={len(hist_a)};k_final={ks[-1]};"
+         f"k_changes={n_changes};tokens={hist_a[-1]['tokens']}")
+
+    plan = resolve_backend(cfg.parallel, where="bench_bert_proxy")
+    rec = {
+        "config": {
+            "model": cfg.model.name, "seq": seq, "vocab": cfg.model.vocab_size,
+            "microbatch_rows": mb_rows, "k0": k0, "token_budget": budget,
+            "optimizer": opt.name, "lr": opt.lr, "base_batch": opt.base_batch,
+            "lr_scale_rule": opt.lr_scale_rule,
+        },
+        "policy": dataclasses.asdict(policy),
+        "fixed": {
+            "k": k0, "steps": steps_fixed, "tokens": steps_fixed * k0 * mb_tokens,
+            "eval_loss": float(te_fixed), "final_train_loss": float(hist_f[-1]["loss"]),
+            "wall_s": wall_fixed,
+        },
+        "autoscaled": {
+            "steps": len(hist_a), "tokens": int(hist_a[-1]["tokens"]),
+            "eval_loss": float(te_auto), "final_train_loss": float(hist_a[-1]["loss"]),
+            "wall_s": wall_auto, "k_final": ks[-1], "k_changes": int(n_changes),
+            # the trajectories the record schema promises (docs/autoscale.md):
+            # per-step k, raw B_simple, its EMA, and the live-rescaled LR
+            "k_trajectory": ks,
+            "b_simple_trajectory": [round(row["b_simple"], 3) for row in hist_a],
+            "b_simple_ema_trajectory": [round(row["b_simple_ema"], 3) for row in hist_a],
+            "lr_trajectory": [round(row["lr"], 8) for row in hist_a],
+        },
+        "plan": plan.describe(),
+        "interpret": plan.interpret_mode(),
+        "backend": jax.default_backend(),
+    }
+    check_plans_agree(rec, what="bench_autoscale record")
+    with open(BENCH_AUTOSCALE, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {os.path.abspath(BENCH_AUTOSCALE)}")
 
 
 def main(fast: bool = False) -> None:
@@ -52,6 +151,7 @@ def main(fast: bool = False) -> None:
                 0.0,
                 f"eval_loss={te:.4f};steps={steps}",
             )
+    _autoscale_ab(cfg0, fast)
     print(f"# bench_bert_proxy done in {time.time()-t0:.1f}s")
 
 

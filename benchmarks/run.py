@@ -39,6 +39,7 @@ _HERE = os.path.dirname(__file__)
 BENCH_JSONS = [
     os.path.join(_HERE, "..", "BENCH_flat_state.json"),
     os.path.join(_HERE, "..", "BENCH_serve.json"),
+    os.path.join(_HERE, "..", "BENCH_autoscale.json"),
 ]
 
 

@@ -23,6 +23,9 @@ def run_checks(fast: bool = False, budget: Optional[int] = None) -> List:
 
     budget = VMEM_BUDGET_BYTES["tpu"] if budget is None else budget
     findings: List = []
+    # static source scan — cheap enough for --fast, and the one rule that
+    # catches kernels the registry never imports
+    findings += rules.check_registry_coverage()
     for kspec in registry.all_kernels().values():
         findings += rules.check_oracle(kspec)
         for cname, cfg in sorted(kspec.configs.items()):

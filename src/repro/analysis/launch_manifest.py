@@ -42,6 +42,12 @@ LAUNCHES: Dict[str, int] = {
     "train_step_fused": 6,   # attn fwd + remat LSE fwd + fused bwd + 2 stats + update
     "train_step_packed": 6,  # packed positions ride the same calls as operands
     "train_step_stale": 4,   # attn fwd + remat fwd + fused bwd + g-only accum
+    # dynamic-k autoscale path: the noise-scale readings (core/noise_scale.py)
+    # are jnp reductions over the already-materialized moment carry, so a
+    # noise_scale=True step launches EXACTLY what train_step_fused does —
+    # at every k the autoscale loop compiles (asserted per-k in
+    # tests/test_autoscale.py)
+    "train_step_noise": 6,
     # SPMD per-shard flat path (shard_map; subprocess tests)
     "spmd_update": 2,  # r-partials + apply, per shard
     "spmd_grad_stats_scan": 2,

@@ -87,7 +87,10 @@ class KernelSpec:
 
 _REGISTRY: Dict[str, KernelSpec] = {}
 
-# Importing these runs every register_kernel call in the repo.
+# Importing these runs every register_kernel call in the repo.  The
+# REGISTRY-COVERAGE rule (analysis/rules.py) enforces the closure property:
+# every module under src/repro/kernels/ with a pl.pallas_call( site must be
+# listed here AND register at least one kernel.
 KERNEL_MODULES = (
     "repro.kernels.flash_attention",
     "repro.kernels.flash_attention_bwd",
@@ -96,6 +99,10 @@ KERNEL_MODULES = (
     "repro.kernels.flat_stats",
     "repro.kernels.flat_spmd",
     "repro.kernels.grad_stats",
+    # per-leaf legacy path (reference backend's fused per-tensor kernels)
+    "repro.kernels.vr_update",
+    "repro.kernels.vr_adam",
+    "repro.kernels.vr_lamb",
 )
 
 

@@ -78,6 +78,7 @@ RULES = {
     "VMEM-BUDGET": "double-buffered operand windows + scratch fit the per-platform VMEM budget",
     "ORACLE-REF": "every registered kernel names a resolvable jnp oracle",
     "LAUNCH-COUNT": "traced pallas_call counts match analysis.launch_manifest",
+    "REGISTRY-COVERAGE": "every kernels/ module with a pl.pallas_call site is registered in analysis.registry",
 }
 
 
@@ -262,6 +263,58 @@ def check_geometry(kernel: str, config: str, geom: Geometry,
     for name, fm in geom.fetch_maps.items():
         findings += _fetch_findings(kernel, config, name, fm)
     findings += _vmem_findings(kernel, config, geom, budget)
+    return findings
+
+
+def check_registry_coverage(
+    kernel_dir=None,
+    package: str = "repro.kernels",
+    known_modules=None,
+    registered=None,
+) -> List[Finding]:
+    """REGISTRY-COVERAGE: no pallas_call can dodge the contract checker.
+
+    Scans every ``*.py`` under the kernels package for ``pl.pallas_call(``
+    CALL SITES (the bare word appears in docstrings and in the jaxpr counter,
+    so the regex matches the call form only) and fails when a containing
+    module either isn't imported by the registry (registry.KERNEL_MODULES)
+    or is imported but registers no kernel.  All arguments default to the
+    real package/registry; the mutation test points them at a synthetic
+    tree instead.
+    """
+    import pathlib
+    import re
+
+    findings: List[Finding] = []
+    if kernel_dir is None:
+        import repro.kernels as _kpkg
+
+        kernel_dir = pathlib.Path(_kpkg.__file__).parent
+    if known_modules is None or registered is None:
+        from repro.analysis import registry as _registry
+
+        kernels = _registry.all_kernels()
+        if known_modules is None:
+            known_modules = _registry.KERNEL_MODULES
+        if registered is None:
+            registered = {k.module for k in kernels.values()}
+    pat = re.compile(r"\bpl\s*\.\s*pallas_call\s*\(")
+    for path in sorted(pathlib.Path(kernel_dir).glob("*.py")):
+        n_sites = len(pat.findall(path.read_text()))
+        if not n_sites:
+            continue
+        mod = f"{package}.{path.stem}"
+        if mod not in known_modules:
+            findings.append(Finding(
+                "REGISTRY-COVERAGE", mod, "-",
+                f"{path.name} has {n_sites} pl.pallas_call site(s) but the module "
+                "is not in registry.KERNEL_MODULES — its kernels dodge the "
+                "contract checker"))
+        elif mod not in registered:
+            findings.append(Finding(
+                "REGISTRY-COVERAGE", mod, "-",
+                f"{path.name} is imported by the registry but registers no kernel "
+                f"for its {n_sites} pl.pallas_call site(s)"))
     return findings
 
 

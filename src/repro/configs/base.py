@@ -175,6 +175,10 @@ class OptimizerConfig:
     stats_method: str = "scan"  # scan (paper) | vmap (shared FSDP gathers)
     gsnr_refresh: int = 1  # recompute GradStats every R steps (1 = paper)
     state_dtype: str = "float32"  # storage dtype for m/v/p moments (math in f32)
+    # --- batch-size LR scaling (paper §6; live rescale via train/autoscale) ---
+    base_batch: int = 0  # reference batch cfg.lr was tuned at; 0 = no rescale
+    lr_scale_rule: str = "sqrt"  # sqrt (paper's choice) | linear | none
+    noise_beta: float = 0.9  # EMA decay for tr(Σ)/|G|² noise-scale smoothing
 
     @property
     def is_vr(self) -> bool:

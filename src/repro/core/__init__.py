@@ -17,7 +17,13 @@ from repro.core.gsnr import (  # noqa: F401
     raw_gsnr,
     variance,
 )
-from repro.core.schedule import linear_scaled_lr, make_schedule, sqrt_scaled_lr  # noqa: F401
+from repro.core.noise_scale import (  # noqa: F401
+    NoiseScaleEstimate,
+    NoiseScaleState,
+    estimate as estimate_noise_scale,
+    noise_terms,
+)
+from repro.core.schedule import linear_scaled_lr, make_schedule, scaled_lr, sqrt_scaled_lr  # noqa: F401
 from repro.core.vrgd import (  # noqa: F401
     make_optimizer,
     vr_adam,

@@ -25,12 +25,33 @@ _tm = jax.tree_util.tree_map
 
 
 def split_batch(batch: PyTree, k: int) -> PyTree:
-    """Reshape every leaf (B, ...) -> (k, B//k, ...)."""
+    """Reshape every leaf (B, ...) -> (k, B//k, ...).
+
+    Raises a loud ValueError when the batch size doesn't divide into k
+    accumulation groups — with both numbers and the remainder, since this is
+    the first thing a bad autoscale proposal or hand-edited k hits.
+    """
+    if k < 1:
+        raise ValueError(f"split_batch: k={k} must be a positive group count")
+    leaves = jax.tree_util.tree_leaves(batch)
+    if not leaves:
+        return batch
+    b = leaves[0].shape[0]
+    if b % k:
+        raise ValueError(
+            f"split_batch: batch_size={b} is not divisible by k={k} "
+            f"accumulation groups (remainder {b % k}). Pick k from the "
+            f"divisors of the batch size — "
+            f"repro.train.autoscale.AutoscalePolicy.feasible_ks({b}) "
+            f"proposes only those."
+        )
 
     def one(x):
-        b = x.shape[0]
-        if b % k:
-            raise ValueError(f"batch {b} not divisible by k={k}")
+        if x.shape[0] != b:
+            raise ValueError(
+                f"split_batch: ragged batch — leaf with leading dim "
+                f"{x.shape[0]} alongside {b}"
+            )
         return x.reshape(k, b // k, *x.shape[1:])
 
     return _tm(one, batch)

@@ -52,8 +52,16 @@ def device_grad_stats_fn(
     has_aux: bool = False,
     flat: bool = False,
     backend=None,
+    with_noise_terms: bool = False,
 ) -> Callable:
-    """Returns f(params, batch) -> (loss, aux, GradStats) with device-wise k.
+    """Returns f(params, batch) -> (loss, aux, GradStats) with device-wise k
+    — or (loss, aux, GradStats, terms) when ``with_noise_terms``, where terms
+    is the (2,) array [|G_big|², |G_small|²] the noise-scale estimator
+    consumes (core/noise_scale.py).  The two norms reduce INSIDE shard_map
+    from the already-pmean'ed moment payload — they ride the existing fused
+    collective (a pre-reduction sum would be wrong for |E[g]|², and a
+    post-shard_map read of the replicated stats would be a second sweep),
+    adding two scalars and zero collectives/launches.
 
     params replicated, batch sharded over ``data_axis``.
 
@@ -112,30 +120,46 @@ def device_grad_stats_fn(
         loss = jax.lax.pmean(loss, data_axis)
         if has_aux:
             aux = jax.lax.pmean(aux, data_axis)
-        return loss, aux, GradStats(mean=mean, sq_mean=sq, k=k)
+        if with_noise_terms:
+            # reduced moments are identical on every shard, so these sums
+            # need no further collective; flat buffers sum exactly (zero
+            # tail padding) and the tree path reduces leaf-wise
+            if flat:
+                g2_big = jnp.sum(jnp.square(mean))
+                g2_small = jnp.sum(sq)
+            else:
+                g2_big = sum(jnp.sum(jnp.square(x)) for x in jax.tree_util.tree_leaves(mean))
+                g2_small = sum(jnp.sum(x) for x in jax.tree_util.tree_leaves(sq))
+            terms = jnp.stack([g2_big, g2_small])
+        else:
+            terms = jnp.zeros((2,), jnp.float32)
+        return loss, aux, GradStats(mean=mean, sq_mean=sq, k=k), terms
 
     # k is static; keep it outside shard_map and rebuild GradStats at the end
     def inner2(params, batch):
-        loss, aux, stats = inner(params, batch)
+        loss, aux, stats, terms = inner(params, batch)
         aux_out = aux if has_aux else jnp.zeros(())
-        return loss, aux_out, stats.mean, stats.sq_mean
+        return loss, aux_out, stats.mean, stats.sq_mean, terms
 
     smapped = _shard_map(
         inner2,
         mesh=mesh,
         in_specs=(P(), P(data_axis)),
-        out_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
         **_SHMAP_KW,
     )
 
     @functools.wraps(loss_fn)
-    def fn(params, batch) -> Tuple[jnp.ndarray, Any, GradStats]:
-        loss, aux, mean, sq = smapped(params, batch)
+    def fn(params, batch):
+        loss, aux, mean, sq, terms = smapped(params, batch)
         if flat:
             from repro.core.layout import FlatBuffer, ParamLayout
 
             layout = ParamLayout.for_tree(params)
             mean, sq = FlatBuffer(mean, layout), FlatBuffer(sq, layout)
-        return loss, (aux if has_aux else None), GradStats(mean=mean, sq_mean=sq, k=k)
+        stats = GradStats(mean=mean, sq_mean=sq, k=k)
+        if with_noise_terms:
+            return loss, (aux if has_aux else None), stats, terms
+        return loss, (aux if has_aux else None), stats
 
     return fn

@@ -4,7 +4,7 @@ paper adopts ("we mainly adopt the square root rules to scale LRs", §6)."""
 from __future__ import annotations
 
 import math
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -20,8 +20,26 @@ def linear_scaled_lr(base_lr: float, batch_size: int, base_batch: int) -> float:
     return base_lr * batch_size / base_batch
 
 
-def make_schedule(cfg: OptimizerConfig) -> Callable:
+def scaled_lr(base_lr: float, batch_size: int, base_batch: int, rule: str = "sqrt") -> float:
+    """Apply the named batch-size scaling rule ("sqrt" | "linear" | "none")."""
+    if rule in ("none", ""):
+        return base_lr
+    if rule == "sqrt":
+        return sqrt_scaled_lr(base_lr, batch_size, base_batch)
+    if rule == "linear":
+        return linear_scaled_lr(base_lr, batch_size, base_batch)
+    raise ValueError(f"unknown lr_scale_rule {rule!r} (want sqrt|linear|none)")
+
+
+def make_schedule(cfg: OptimizerConfig, effective_batch: Optional[int] = None) -> Callable:
+    """Step -> LR.  cfg.lr is the PEAK at cfg.base_batch; when the caller
+    passes the live ``effective_batch`` (and cfg.base_batch > 0) the peak
+    rescales through cfg.lr_scale_rule — so a schedule rebuilt after an
+    accumulation-count change (train/autoscale.py) moves the LR with the
+    batch instead of going stale on the config's static value."""
     peak, warm, total = cfg.lr, max(cfg.warmup_steps, 1), max(cfg.total_steps, 2)
+    if effective_batch and cfg.base_batch:
+        peak = scaled_lr(cfg.lr, effective_batch, cfg.base_batch, cfg.lr_scale_rule)
 
     def fn(step):
         step = jnp.asarray(step, jnp.float32)

@@ -315,18 +315,22 @@ def vr_lamb(
 
 
 def make_optimizer(cfg, backend: Optional[Backend] = None, *, spmd=None,
-                   use_pallas=None) -> B.Transform:
+                   use_pallas=None, effective_batch: Optional[int] = None) -> B.Transform:
     """OptimizerConfig -> Transform (base or VR per cfg.name).
 
     backend: the execution plan (repro.backend.Backend; also accepts a
     ParallelismConfig / Config, or a legacy bool — deprecated, warns once).
     spmd: optional Backend.shard(...) plan; the fused flat-buffer calls then
     run per-shard under shard_map on FSDP-sharded buffer rows.
+    effective_batch: the LIVE global batch this optimizer will step at; with
+    cfg.base_batch set, the schedule peak rescales through cfg.lr_scale_rule
+    (train/autoscale.py rebuilds the optimizer when k changes, so the LR
+    tracks the batch instead of the config's static value).
     """
     from repro.core.schedule import make_schedule
 
     bk = resolve_backend(backend, use_pallas=use_pallas, where="make_optimizer")
-    lr_fn = make_schedule(cfg)
+    lr_fn = make_schedule(cfg, effective_batch=effective_batch)
     g, ge = cfg.gamma, cfg.gsnr_eps
     table = {
         "sgd": lambda: B.sgd(lr_fn),

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.vr_update import LANE, BLOCK_ROWS, _pad2d
+from repro.kernels.vr_update import LANE, BLOCK_ROWS, _pad2d, padded_rows
 
 
 def _kernel(
@@ -90,3 +90,42 @@ def vr_adam_inner(
     )(*tens, scal)
     unpad = lambda x: x.reshape(-1)[:n].reshape(shape)
     return tuple(unpad(o) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis)
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(*, n: int = 65536):
+    from repro.analysis.registry import Geometry, Operand
+
+    rows = padded_rows(n)
+    br = min(BLOCK_ROWS, rows)
+    blk = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    f32 = lambda spec: Operand(spec, dtype="float32")
+    scal = Operand(pl.BlockSpec((1, 4), lambda i: (0, 0)), role="meta")
+    return Geometry(
+        grid=(-(-rows // br),),
+        ins={"g": f32(blk), "ga": f32(blk), "g2": f32(blk), "m": f32(blk),
+             "v": f32(blk), "p": f32(blk), "scal": scal},
+        outs={"dir": f32(blk), "m_out": f32(blk), "v_out": f32(blk),
+              "p_out": f32(blk)},
+    )
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    register_kernel(
+        "vr_adam_inner", module=__name__, oracle="vr_adam_inner_ref",
+        build=_analysis_geometry,
+        configs={
+            "representative": dict(n=65536),
+            "hostile_subrow": dict(n=517),
+            "hostile_partial_edge": dict(n=300000),
+        },
+    )
+
+
+_register()

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.vr_update import BLOCK_ROWS, LANE, _pad2d
+from repro.kernels.vr_update import BLOCK_ROWS, LANE, _pad2d, padded_rows
 
 
 def _pad_full_blocks(x2d: jnp.ndarray, br: int) -> jnp.ndarray:
@@ -205,3 +205,58 @@ def vr_lars_inner(g, ga, g2, w, *, wd, gamma, eps, interpret: bool = True):
     )(*tens, inv_mean)
     u = u2d.reshape(-1)[:n].reshape(shape)
     return u, jnp.sum(uacc), jnp.sum(wacc)
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis)
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(kname: str, *, n: int = 65536):
+    from repro.analysis.registry import Geometry, Operand
+
+    rows = padded_rows(n)
+    br = min(BLOCK_ROWS, rows)
+    grid = (-(-rows // br),)  # _pad_full_blocks: the reduce grid has no edge block
+    blk = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    f32 = lambda spec: Operand(spec, dtype="float32")
+    # (1, LANE) norm-partial accumulators: constant index every step, so the
+    # registry replay proves the revisits are one consecutive run (no race)
+    acc = Operand(pl.BlockSpec((1, LANE), lambda i: (0, 0)), role="meta")
+    if kname == "vr_lamb_inner":
+        scal = Operand(pl.BlockSpec((1, 4), lambda i: (0, 0)), role="meta")
+        return Geometry(
+            grid=grid,
+            ins={"g": f32(blk), "ga": f32(blk), "g2": f32(blk), "m": f32(blk),
+                 "v": f32(blk), "p": f32(blk), "w": f32(blk), "scal": scal},
+            outs={"u": f32(blk), "m_out": f32(blk), "v_out": f32(blk),
+                  "p_out": f32(blk), "uacc": acc, "wacc": acc},
+        )
+    scal = Operand(pl.BlockSpec((1, 1), lambda i: (0, 0)), role="meta")
+    return Geometry(
+        grid=grid,
+        ins={"g": f32(blk), "ga": f32(blk), "g2": f32(blk), "w": f32(blk),
+             "scal": scal},
+        outs={"u": f32(blk), "uacc": acc, "wacc": acc},
+    )
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    for kname, oracle in (
+        ("vr_lamb_inner", "vr_lamb_inner_ref"),
+        ("vr_lars_inner", "vr_lars_inner_ref"),
+    ):
+        register_kernel(
+            kname, module=__name__, oracle=oracle,
+            build=functools.partial(_analysis_geometry, kname),
+            configs={
+                "representative": dict(n=65536),
+                "hostile_subrow": dict(n=517),
+                "hostile_multiblock": dict(n=300000),
+            },
+        )
+
+
+_register()

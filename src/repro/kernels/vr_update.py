@@ -102,3 +102,40 @@ def vr_scale(
     sg = sg2d.reshape(-1)[:n].reshape(orig_shape)
     r = r2d.reshape(-1)[:n].reshape(orig_shape)
     return sg, r
+
+
+# ---------------------------------------------------------------------------
+# contract registration (repro.analysis)
+# ---------------------------------------------------------------------------
+
+
+def _analysis_geometry(*, n: int = 65536):
+    from repro.analysis.registry import Geometry, Operand
+
+    rows = padded_rows(n)
+    br = min(BLOCK_ROWS, rows)
+    blk = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    f32 = lambda spec: Operand(spec, dtype="float32")
+    scal = Operand(pl.BlockSpec((1, 1), lambda i: (0, 0)), role="meta")
+    return Geometry(
+        grid=(-(-rows // br),),
+        ins={"g": f32(blk), "ga": f32(blk), "g2": f32(blk), "scal": scal},
+        outs={"sg": f32(blk), "r": f32(blk)},
+    )
+
+
+def _register():
+    from repro.analysis.registry import register_kernel
+
+    register_kernel(
+        "vr_scale", module=__name__, oracle="vr_scale_ref",
+        build=_analysis_geometry,
+        configs={
+            "representative": dict(n=65536),
+            "hostile_subrow": dict(n=517),
+            "hostile_partial_edge": dict(n=300000),
+        },
+    )
+
+
+_register()

@@ -1,0 +1,232 @@
+"""Online batch-size autoscaling driven by the measured gradient noise scale.
+
+The loop the paper motivates but hand-tunes: each optimizer step consumes k
+microbatches (effective batch = k × microbatch rows), reads the critical batch
+size B_simple ≈ tr(Σ)/|G|² off the step's own flat moment carry
+(core/noise_scale.py — zero extra launches), EMA-smooths it, and lets an
+:class:`AutoscalePolicy` move k toward the measured limit — warmup-frozen,
+hysteresis-banded, cooldown-limited, clamped, at most doubling/halving per
+change.  When k changes the jitted step is rebuilt (cached per k: the
+accumulation count is a static shape in split_batch's (k, B/k, ...) reshape)
+and the LR rescales through core/schedule.py's sqrt/linear rule with the LIVE
+effective batch (OptimizerConfig.base_batch / lr_scale_rule).
+
+The optimizer state flows across k changes unchanged: its treedef depends only
+on the ParamLayout, never on k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Iterable, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import Config
+from repro.core import noise_scale as ns
+from repro.train.train_state import TrainState
+
+_tm = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """Maps the smoothed B_simple to the next accumulation count k.
+
+    k_min/k_max:     hard clamp (k_min >= 2 — the estimator needs two group
+                     sizes, so B_small = B/k must differ from B_big = B)
+    warmup_steps:    freeze k while the EMA warms up
+    cooldown:        minimum steps between consecutive k changes
+    hysteresis:      move only when the target leaves (k/h, k·h) — bounces
+                     inside the band are noise, not signal
+    target_frac:     aim the effective batch at target_frac × B_simple
+    max_step_factor: at most ×/÷ this per change (gradual ramp; the sqrt LR
+                     rule then moves the LR by √factor per change)
+    ema_beta:        EMA decay for the tr(Σ)/|G|² smoothing
+    """
+
+    k_min: int = 2
+    k_max: int = 64
+    warmup_steps: int = 10
+    cooldown: int = 5
+    hysteresis: float = 1.5
+    target_frac: float = 1.0
+    max_step_factor: int = 2
+    ema_beta: float = 0.9
+
+    def __post_init__(self):
+        if self.k_min < 2:
+            raise ValueError(f"k_min={self.k_min}: the estimator needs k >= 2")
+        if self.k_max < self.k_min:
+            raise ValueError(f"k_max={self.k_max} < k_min={self.k_min}")
+        if self.hysteresis <= 1.0:
+            raise ValueError(f"hysteresis={self.hysteresis} must be > 1")
+        if self.max_step_factor < 2:
+            raise ValueError(f"max_step_factor={self.max_step_factor} must be >= 2")
+        if not 0.0 <= self.ema_beta < 1.0:
+            raise ValueError(f"ema_beta={self.ema_beta} must be in [0, 1)")
+
+    def feasible_ks(self, batch_size: int) -> Tuple[int, ...]:
+        """Divisors of ``batch_size`` within [k_min, k_max] — the only k
+        values core/accumulate.split_batch accepts when the loader batch is
+        fixed (its ValueError points here)."""
+        if batch_size <= 0:
+            raise ValueError(f"batch_size={batch_size} must be positive")
+        return tuple(
+            k
+            for k in range(self.k_min, min(self.k_max, batch_size) + 1)
+            if batch_size % k == 0
+        )
+
+    def propose(
+        self,
+        *,
+        step: int,
+        current_k: int,
+        b_simple: float,
+        microbatch_size: int,
+        last_change_step: Optional[int] = None,
+        feasible: Optional[Tuple[int, ...]] = None,
+    ) -> int:
+        """The next k (== current_k when frozen, banded, cooling, or b_simple
+        is unusable).  ``feasible``, when given, snaps the proposal to the
+        nearest allowed value in log space (use feasible_ks(batch) when the
+        loader batch is fixed and k must divide it)."""
+        if step < self.warmup_steps:
+            return current_k
+        if last_change_step is not None and step - last_change_step < self.cooldown:
+            return current_k
+        b = float(b_simple)
+        if not math.isfinite(b) or b <= 0:
+            return current_k
+        k_target = self.target_frac * b / float(microbatch_size)
+        if current_k / self.hysteresis < k_target < current_k * self.hysteresis:
+            return current_k
+        if k_target > current_k:
+            k_new = min(current_k * self.max_step_factor, int(k_target))
+        else:
+            k_new = max(current_k // self.max_step_factor, int(math.ceil(k_target)))
+        k_new = max(self.k_min, min(self.k_max, k_new))
+        if feasible:
+            k_new = min(feasible, key=lambda f: abs(math.log(f / k_new)))
+        return k_new
+
+
+def autoscale_train_loop(
+    cfg: Config,
+    microbatches: Iterable,
+    steps: Optional[int] = None,
+    *,
+    policy: Optional[AutoscalePolicy] = None,
+    state: Optional[TrainState] = None,
+    loss_fn: Optional[Callable] = None,
+    token_budget: Optional[int] = None,
+    log_every: int = 0,
+) -> Tuple[TrainState, list]:
+    """Autoscaled driver. Returns (state, history).
+
+    ``microbatches`` yields FIXED-size microbatches; each optimizer step
+    concatenates k of them (effective batch = k × microbatch rows), so any k
+    trivially satisfies split_batch's divisibility contract.  Stops after
+    ``steps`` optimizer steps or once ``token_budget`` tokens are consumed
+    (whichever comes first; at least one must be given) — a budget stop is
+    what makes fixed-k vs autoscaled A/Bs comparable.
+
+    Every history row records step/k/effective_batch/loss/lr/b_simple/
+    b_simple_ema/tokens — the B_simple trajectory benches persist into BENCH
+    records (see docs/autoscale.md).
+    """
+    if steps is None and token_budget is None:
+        raise ValueError("autoscale_train_loop: give steps=, token_budget=, or both")
+    from repro.train.loss import make_loss_fn
+    from repro.train.trainer import init_state, make_train_step
+
+    policy = policy or AutoscalePolicy()
+    opt_cfg = cfg.optimizer
+    loss_fn = loss_fn or make_loss_fn(cfg)
+
+    it = iter(microbatches)
+    first = next(it)
+    mb_rows = int(jax.tree_util.tree_leaves(first)[0].shape[0])
+    mb_tokens = (
+        int(np.asarray(first["tokens"]).size)
+        if isinstance(first, dict) and "tokens" in first
+        else mb_rows
+    )
+
+    def cfg_for(k: int) -> Config:
+        return cfg.replace(
+            global_batch=k * mb_rows,
+            optimizer=dataclasses.replace(opt_cfg, k=k),
+        )
+
+    cache = {}
+
+    def step_fn_for(k: int):
+        # k is a static shape (split_batch reshape + schedule peak), so each
+        # distinct k compiles once and is reused for the rest of the run
+        if k not in cache:
+            fn, _ = make_train_step(cfg_for(k), loss_fn, noise_scale=True)
+            cache[k] = jax.jit(lambda s, b, f=fn: f(s, b, True))
+        return cache[k]
+
+    k = max(policy.k_min, min(policy.k_max, opt_cfg.k))
+    if state is None:
+        state = init_state(cfg_for(k))
+    state = state._replace(k=k)
+
+    noise_st = ns.init_noise_state()
+    pending = [first]
+    consumed = 0
+    last_change: Optional[int] = None
+    history = []
+    i = 0
+    t0 = time.time()
+    while True:
+        if steps is not None and i >= steps:
+            break
+        if token_budget is not None and consumed >= token_budget:
+            break
+        while len(pending) < k:
+            pending.append(next(it))
+        mbs, pending = pending[:k], pending[k:]
+        batch = _tm(lambda *xs: np.concatenate([np.asarray(x) for x in xs], 0), *mbs)
+        state, metrics = step_fn_for(k)(state, batch)
+        consumed += k * mb_tokens
+        noise_st, smoothed = ns.update_noise_state(
+            noise_st,
+            float(metrics["noise/tr_sigma"]),
+            float(metrics["noise/g2"]),
+            beta=policy.ema_beta,
+        )
+        row = {
+            "step": i,
+            "k": k,
+            "effective_batch": k * mb_rows,
+            "loss": float(metrics["loss"]),
+            "lr": float(metrics.get("lr", 0.0)),
+            "b_simple": float(metrics["noise/b_simple"]),
+            "b_simple_ema": smoothed.b_simple,
+            "tokens": consumed,
+            "wall": time.time() - t0,
+        }
+        history.append(row)
+        if log_every and (i % log_every == 0):
+            print(
+                f"  step {i:5d} k {k:3d} eff {k * mb_rows:5d} "
+                f"loss {row['loss']:.4f} B_simple {smoothed.b_simple:.1f}"
+            )
+        proposal = policy.propose(
+            step=i,
+            current_k=k,
+            b_simple=smoothed.b_simple,
+            microbatch_size=mb_rows,
+            last_change_step=last_change,
+        )
+        if proposal != k:
+            last_change, k = i, proposal
+            state = state._replace(k=k)
+        i += 1
+    return state, history

@@ -8,6 +8,11 @@ class TrainState(NamedTuple):
     params: Any
     opt_state: Any  # flat-state path: m/v/p are FlatBuffer nodes (core/layout.py)
     step: Any  # int32 scalar (mirrors opt_state["step"], kept for convenience)
+    # Dynamic accumulation count (train/autoscale.py). None on fixed-k runs,
+    # so legacy 3-field construction, checkpoints, and templates are
+    # unchanged (a None leaf is an empty pytree subtree). The train step
+    # passes it through untouched; only the autoscale loop writes it.
+    k: Any = None
 
     def with_unpacked_opt_state(self) -> "TrainState":
         """TrainState with any FlatBuffer optimizer state expanded back to

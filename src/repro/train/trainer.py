@@ -50,28 +50,57 @@ def make_train_step(
     loss_fn: Optional[Callable] = None,
     mesh=None,
     log_gsnr: bool = False,
+    noise_scale: bool = False,
 ) -> Tuple[Callable, Any]:
-    """Returns (train_step(state, batch) -> (state, metrics), optimizer)."""
+    """Returns (train_step(state, batch) -> (state, metrics), optimizer).
+
+    noise_scale=True adds the gradient-noise-scale readings (noise/g2_small,
+    noise/g2_big, noise/tr_sigma, noise/g2, noise/b_simple — plus the live
+    lr) to the metrics of every fresh-stats step.  They are jnp reductions
+    over the already-materialized moment carry (core/noise_scale.py), so the
+    step's pallas_call count is unchanged; on the data_axis source the two
+    norm readings ride the existing fused psum payload inside shard_map.
+    """
     opt_cfg = cfg.optimizer
     bk = resolve_backend(cfg.parallel, where="make_train_step")
     spmd = _shard_plan(bk, mesh)
-    opt = make_optimizer(opt_cfg, backend=bk, spmd=spmd)
+    # thread the LIVE effective batch: with cfg.optimizer.base_batch set the
+    # schedule peak rescales through the sqrt/linear rule instead of going
+    # stale on whatever batch the config was first written with
+    opt = make_optimizer(opt_cfg, backend=bk, spmd=spmd, effective_batch=cfg.global_batch)
     loss_fn = loss_fn or make_loss_fn(cfg)
     is_vr = opt_cfg.is_vr
     use_device_stats = is_vr and opt_cfg.gsnr_source == "data_axis" and mesh is not None
     if use_device_stats:
         stats_fn = device_grad_stats_fn(
             lambda p, b: loss_fn(p, b), mesh, has_aux=True, backend=bk,
+            with_noise_terms=noise_scale,
         )
+    if noise_scale:
+        from repro.core import noise_scale as ns
+        from repro.core.schedule import make_schedule
+
+        lr_dbg = make_schedule(opt_cfg, effective_batch=cfg.global_batch)
 
     def train_step(state: TrainState, batch, with_stats: bool = True) -> Tuple[TrainState, Dict]:
+        noise_est = None
         if is_vr and with_stats:
-            if use_device_stats:
+            if use_device_stats and noise_scale:
+                loss, aux, stats, nterms = stats_fn(state.params, batch)
+                noise_est = ns.estimate_from_terms(
+                    g2_small=nterms[1], g2_big=nterms[0],
+                    b_small=cfg.global_batch / stats.k, b_big=cfg.global_batch,
+                )
+            elif use_device_stats:
                 loss, aux, stats = stats_fn(state.params, batch)
             else:
                 loss, aux, stats = grad_stats(
                     loss_fn, state.params, batch, opt_cfg.k, has_aux=True,
                     method=opt_cfg.stats_method, backend=bk, spmd=spmd,
+                )
+            if noise_scale and noise_est is None:
+                noise_est = ns.estimate(
+                    stats, b_small=cfg.global_batch / stats.k, b_big=cfg.global_batch
                 )
             grads = stats.mean
         elif is_vr:
@@ -101,7 +130,20 @@ def make_train_step(
         }
         if log_gsnr and stats is not None:
             metrics.update(gsnr_summary(gsnr_scale(stats, opt_cfg.gamma), opt_cfg.gamma))
-        return TrainState(params, opt_state, opt_state["step"]), metrics
+        if noise_scale:
+            metrics["lr"] = lr_dbg(state.step)
+            if noise_est is not None:
+                metrics.update(
+                    {
+                        "noise/g2_small": noise_est.g2_small,
+                        "noise/g2_big": noise_est.g2_big,
+                        "noise/tr_sigma": noise_est.tr_sigma,
+                        "noise/g2": noise_est.g2,
+                        "noise/b_simple": noise_est.b_simple,
+                    }
+                )
+        # _replace keeps dynamic fields (autoscale's k) flowing through
+        return state._replace(params=params, opt_state=opt_state, step=opt_state["step"]), metrics
 
     return train_step, opt
 
@@ -114,16 +156,47 @@ def init_state(cfg: Config, key=None, params=None) -> TrainState:
     # init produces FlatBuffer moments, and the state structure has to match
     # the transform make_train_step builds (a pytree-state checkpoint still
     # restores into either — see train/checkpoint.py).
-    opt = make_optimizer(cfg.optimizer, backend=resolve_backend(cfg.parallel, where="init_state"))
+    opt = make_optimizer(
+        cfg.optimizer,
+        backend=resolve_backend(cfg.parallel, where="init_state"),
+        effective_batch=cfg.global_batch,
+    )
     opt_state = opt.init(params)
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32))
 
 
+def _live_tokens(batch) -> float:
+    """Real (non-pad) token count of a batch: explicit mask > packed
+    positions (pad rows carry position -1, train/loss.py) > every element of
+    the targets/tokens leaf > leading dim for non-token batches."""
+    if isinstance(batch, dict):
+        if "mask" in batch:
+            return float(jnp.sum(batch["mask"] > 0))
+        if "positions" in batch:
+            return float(jnp.sum(batch["positions"] >= 0))
+        for key in ("targets", "tokens"):
+            if key in batch:
+                import numpy as _np
+
+                return float(_np.asarray(batch[key]).size)
+    leaves = jax.tree_util.tree_leaves(batch)
+    return float(leaves[0].shape[0]) if leaves else 1.0
+
+
 def eval_loss(cfg: Config, loss_fn, params, batches: Iterable) -> float:
-    """Mean loss over an eval stream (generalization-gap measurements)."""
+    """Mean loss over an eval stream (generalization-gap measurements).
+
+    Each batch's token-mean loss is weighted by its REAL (non-pad) token
+    count, so a ragged/padded final batch counts in proportion to the tokens
+    it actually holds instead of skewing the average with a full batch's
+    weight."""
     f = jax.jit(lambda p, b: loss_fn(p, b)[0])
-    losses = [float(f(params, b)) for b in batches]
-    return sum(losses) / max(len(losses), 1)
+    total = weight = 0.0
+    for b in batches:
+        w = _live_tokens(b)
+        total += float(f(params, b)) * w
+        weight += w
+    return total / max(weight, 1.0)
 
 
 def train_loop(

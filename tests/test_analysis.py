@@ -50,11 +50,16 @@ def test_committed_kernels_pass_the_full_contract_check():
 
 def test_registry_covers_every_kernel_module():
     kernels = all_kernels()
-    assert len(kernels) >= 19
+    assert len(kernels) >= 23
     modules = {k.module for k in kernels.values()}
     for mod in ("flash_attention", "flash_attention_bwd", "flash_decode",
-                "flat_update", "flat_stats", "flat_spmd", "grad_stats"):
+                "flat_update", "flat_stats", "flat_spmd", "grad_stats",
+                "vr_update", "vr_adam", "vr_lamb"):
         assert any(m.endswith(mod) for m in modules), f"no kernels from {mod}"
+
+
+def test_registry_coverage_clean_on_the_real_tree():
+    assert rules.check_registry_coverage() == []
 
 
 def test_every_kernel_declares_a_resolvable_oracle():
@@ -163,6 +168,40 @@ def test_mutation_missing_oracle_is_caught():
     bare = KernelSpec(name="bare", module="tests", oracle=None,
                       build=lambda: None, configs={})
     assert _rules_of(rules.check_oracle(bare)) == {"ORACLE-REF"}
+
+
+def test_mutation_unregistered_pallas_module_is_caught(tmp_path):
+    """A kernels/ module with a pl.pallas_call site that the registry never
+    imports must trip REGISTRY-COVERAGE — and ONLY that rule — while a
+    docstring mentioning pallas_call must not."""
+    (tmp_path / "rogue.py").write_text(
+        '"""Docstring mentioning pallas_call — not a call site."""\n'
+        "from jax.experimental import pallas as pl\n\n"
+        "def run(x):\n"
+        "    return pl.pallas_call(lambda r: None, out_shape=x)(x)\n"
+    )
+    (tmp_path / "innocent.py").write_text(
+        '"""Counts pallas_call equations in a jaxpr (no call site here)."""\n'
+        "def count(): return 0\n"
+    )
+    # not imported at all -> dodges the checker
+    found = rules.check_registry_coverage(
+        kernel_dir=tmp_path, package="fake.kernels",
+        known_modules=(), registered=set())
+    assert _rules_of(found) == {"REGISTRY-COVERAGE"}
+    assert [f.kernel for f in found] == ["fake.kernels.rogue"]
+    assert "not in registry.KERNEL_MODULES" in found[0].detail
+    # imported but registers nothing -> still a finding, different detail
+    found = rules.check_registry_coverage(
+        kernel_dir=tmp_path, package="fake.kernels",
+        known_modules=("fake.kernels.rogue",), registered=set())
+    assert _rules_of(found) == {"REGISTRY-COVERAGE"}
+    assert "registers no kernel" in found[0].detail
+    # imported AND registering -> clean
+    assert rules.check_registry_coverage(
+        kernel_dir=tmp_path, package="fake.kernels",
+        known_modules=("fake.kernels.rogue",),
+        registered={"fake.kernels.rogue"}) == []
 
 
 def test_mutation_launch_count_drift_is_caught():

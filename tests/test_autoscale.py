@@ -1,0 +1,222 @@
+"""Autoscale policy + loop (train/autoscale.py), the split_batch divisibility
+contract it leans on, live-batch LR rescaling through make_schedule, and the
+launch-count guarantee: a noise_scale=True step launches exactly what the
+fixed-k fused step does."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import Config, ModelConfig, OptimizerConfig
+from repro.core.accumulate import split_batch
+from repro.core.schedule import make_schedule, scaled_lr
+from repro.data import lm_batches
+from repro.train.autoscale import AutoscalePolicy, autoscale_train_loop
+
+TINY = Config(
+    model=ModelConfig(
+        name="tiny", n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128, vocab_size=64
+    ),
+    optimizer=OptimizerConfig(name="vr_adam", lr=3e-3, warmup_steps=5, total_steps=60, k=4),
+    global_batch=16,
+    seq_len=32,
+)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: split_batch raises loudly, and feasible_ks proposes only
+# divisors that split_batch accepts
+# ---------------------------------------------------------------------------
+
+
+def test_split_batch_remainder_error_names_both_numbers():
+    batch = {"x": jnp.ones((10, 3))}
+    with pytest.raises(ValueError) as ei:
+        split_batch(batch, 4)
+    msg = str(ei.value)
+    assert "batch_size=10" in msg
+    assert "k=4" in msg
+    assert "remainder 2" in msg
+    assert "feasible_ks" in msg  # the error points at the policy helper
+
+
+def test_split_batch_ragged_leaf_error():
+    with pytest.raises(ValueError, match="ragged"):
+        split_batch({"x": jnp.ones((8, 2)), "y": jnp.ones((6,))}, 2)
+
+
+def test_feasible_ks_are_exactly_the_workable_divisors():
+    pol = AutoscalePolicy(k_min=2, k_max=64)
+    ks = pol.feasible_ks(48)
+    assert ks == (2, 3, 4, 6, 8, 12, 16, 24, 48)
+    batch = {"x": jnp.ones((48, 2))}
+    for k in ks:
+        mb = split_batch(batch, k)  # none of these raise
+        assert mb["x"].shape == (k, 48 // k, 2)
+    for k in range(2, 49):
+        if k not in ks:
+            with pytest.raises(ValueError):
+                split_batch(batch, k)
+    with pytest.raises(ValueError, match="positive"):
+        pol.feasible_ks(0)
+
+
+# ---------------------------------------------------------------------------
+# policy unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="k_min"):
+        AutoscalePolicy(k_min=1)
+    with pytest.raises(ValueError, match="k_max"):
+        AutoscalePolicy(k_min=4, k_max=2)
+    with pytest.raises(ValueError, match="hysteresis"):
+        AutoscalePolicy(hysteresis=1.0)
+    with pytest.raises(ValueError, match="ema_beta"):
+        AutoscalePolicy(ema_beta=1.0)
+
+
+def test_policy_warmup_cooldown_and_band_freeze_k():
+    pol = AutoscalePolicy(k_min=2, k_max=64, warmup_steps=5, cooldown=3, hysteresis=1.5)
+    kw = dict(current_k=8, b_simple=1024.0, microbatch_size=4)  # target k = 256
+    assert pol.propose(step=4, **kw) == 8  # warmup
+    assert pol.propose(step=5, last_change_step=3, **kw) == 8  # cooling
+    assert pol.propose(step=10, **kw) == 16  # geometric ramp, not a jump to 256
+    # inside the hysteresis band: hold
+    assert pol.propose(step=10, current_k=8, b_simple=8 * 4 * 1.2, microbatch_size=4) == 8
+    # unusable estimates: hold
+    assert pol.propose(step=10, current_k=8, b_simple=float("nan"), microbatch_size=4) == 8
+    assert pol.propose(step=10, current_k=8, b_simple=-3.0, microbatch_size=4) == 8
+
+
+def test_policy_shrinks_clamps_and_snaps():
+    pol = AutoscalePolicy(k_min=2, k_max=32, warmup_steps=0, hysteresis=1.2)
+    # shrink is also ramped: 16 -> 8 even though target is 2
+    assert pol.propose(step=9, current_k=16, b_simple=8.0, microbatch_size=4) == 8
+    # clamp at k_min / k_max
+    assert pol.propose(step=9, current_k=2, b_simple=1e-3, microbatch_size=4) == 2
+    assert pol.propose(step=9, current_k=32, b_simple=1e9, microbatch_size=4) == 32
+    # snap to nearest feasible divisor in log space
+    got = pol.propose(
+        step=9, current_k=4, b_simple=4 * 7 * 1.9, microbatch_size=7,
+        feasible=pol.feasible_ks(28),
+    )
+    assert got in pol.feasible_ks(28)
+    assert got == 7  # raw proposal 7 is itself a divisor of 28
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: make_schedule sees the LIVE effective batch
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_sqrt_rule_doubling_k_scales_lr_by_sqrt2():
+    cfg = OptimizerConfig(
+        name="vr_adam", lr=1e-3, schedule="constant",
+        base_batch=256, lr_scale_rule="sqrt",
+    )
+    mb, k = 64, 4
+    lr_k = make_schedule(cfg, effective_batch=mb * k)(jnp.asarray(0))
+    lr_2k = make_schedule(cfg, effective_batch=mb * 2 * k)(jnp.asarray(0))
+    assert float(lr_2k) / float(lr_k) == pytest.approx(math.sqrt(2.0), rel=1e-6)
+    assert float(lr_k) == pytest.approx(1e-3 * math.sqrt(mb * k / 256), rel=1e-6)
+    # linear rule doubles; rule "none" and base_batch=0 are both identity
+    lin = dataclasses.replace(cfg, lr_scale_rule="linear")
+    assert float(make_schedule(lin, effective_batch=512)(jnp.asarray(0))) == pytest.approx(2e-3)
+    off = dataclasses.replace(cfg, lr_scale_rule="none")
+    assert float(make_schedule(off, effective_batch=512)(jnp.asarray(0))) == pytest.approx(1e-3)
+    unset = dataclasses.replace(cfg, base_batch=0)
+    assert float(make_schedule(unset, effective_batch=512)(jnp.asarray(0))) == pytest.approx(1e-3)
+    with pytest.raises(ValueError, match="rule"):
+        scaled_lr(1e-3, 512, 256, rule="cubic")
+
+
+# ---------------------------------------------------------------------------
+# the loop: k adjusts from the measured B_simple, LR follows, state flows
+# ---------------------------------------------------------------------------
+
+
+def test_autoscale_loop_adjusts_k_and_rescales_lr():
+    cfg = TINY.replace(
+        optimizer=dataclasses.replace(
+            TINY.optimizer, k=2, base_batch=8, lr_scale_rule="sqrt", lr=1e-3,
+            schedule="constant", warmup_steps=0,
+        ),
+        global_batch=8,
+    )
+    pol = AutoscalePolicy(
+        k_min=2, k_max=16, warmup_steps=3, cooldown=2, hysteresis=1.25, ema_beta=0.8
+    )
+    stream = lm_batches(cfg.model.vocab_size, 4, cfg.seq_len, seed=0)
+    state, hist = autoscale_train_loop(cfg, stream, steps=12, policy=pol)
+    ks = [row["k"] for row in hist]
+    assert ks[0] == 2
+    assert len(set(ks)) > 1, f"k never moved: {ks}"  # acceptance: adjusts at least once
+    # k only moves by the policy's ramp, never outside the clamp
+    for a, b in zip(ks, ks[1:]):
+        assert pol.k_min <= b <= pol.k_max
+        assert b in (a, *range(a // 2, 2 * a + 1))
+    # LR tracks the sqrt rule at the LIVE effective batch of each step
+    for row in hist:
+        want = 1e-3 * math.sqrt(row["effective_batch"] / 8)
+        assert row["lr"] == pytest.approx(want, rel=1e-5)
+    # history carries the B_simple trajectory benches persist
+    assert all(np.isfinite(row["b_simple"]) for row in hist[1:])
+    assert all("b_simple_ema" in row and "tokens" in row for row in hist)
+    assert int(state.k) == ks[-1]
+    assert int(state.step) == len(hist)
+
+
+def test_autoscale_loop_requires_a_stop_condition():
+    with pytest.raises(ValueError, match="steps"):
+        autoscale_train_loop(TINY, iter([]))
+
+
+# ---------------------------------------------------------------------------
+# launch-count guarantee: the estimator adds ZERO pallas_calls
+# ---------------------------------------------------------------------------
+
+
+def test_noise_scale_step_launch_count_matches_fused():
+    """make_train_step(noise_scale=True) reads the noise terms off the flat
+    moment carry with jnp reductions — the jaxpr holds exactly the fixed-k
+    fused step's pallas_calls, at every k the autoscale loop would compile."""
+    from repro.analysis.launch_manifest import LAUNCHES
+    from repro.configs import get_smoke
+    from repro.kernels.ops import count_pallas_calls
+    from repro.train import init_state, make_loss_fn, make_train_step
+
+    assert LAUNCHES["train_step_noise"] == LAUNCHES["train_step_fused"]
+    base = get_smoke("granite-3-2b").replace(seq_len=16)
+    for k in (2, 4):
+        cfg = base.replace(
+            global_batch=8,
+            optimizer=dataclasses.replace(base.optimizer, name="vr_lamb", k=k),
+            parallel=dataclasses.replace(base.parallel, use_pallas=True),
+        )
+        batch = next(iter(lm_batches(cfg.model.vocab_size, 8, 16, seed=0)))
+        state = init_state(cfg)
+        step_fn, _ = make_train_step(cfg, make_loss_fn(cfg), noise_scale=True)
+        jaxpr = jax.make_jaxpr(step_fn)(state, batch)
+        got = count_pallas_calls(jaxpr)
+        assert got == LAUNCHES["train_step_noise"], (k, got)
+
+
+def test_noise_scale_step_logs_the_estimate():
+    cfg = TINY
+    state = __import__("repro.train", fromlist=["init_state"]).init_state(cfg)
+    from repro.train import make_train_step
+
+    step_fn, _ = make_train_step(cfg, noise_scale=True)
+    batch = next(iter(lm_batches(64, 16, 32, seed=0)))
+    new_state, metrics = jax.jit(step_fn)(state, batch)
+    for key in ("noise/tr_sigma", "noise/g2", "noise/b_simple", "lr"):
+        assert key in metrics
+    assert float(metrics["noise/b_simple"]) > 0
+    assert np.isfinite(float(metrics["noise/tr_sigma"]))
+    # k rides through the jitted step untouched
+    assert new_state.k is state.k

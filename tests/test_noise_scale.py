@@ -1,0 +1,148 @@
+"""Noise-scale estimator (core/noise_scale.py): differential vs a brute-force
+oracle that materializes every per-microbatch gradient, EMA debiasing against
+the SNIPPETS §1 reference, and packing-order invariance on the FlatBuffer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backend import Backend
+from repro.core import GradStats, grad_stats, split_batch
+from repro.core import noise_scale as ns
+from repro.core.layout import ParamLayout, as_flat
+
+
+def _linreg():
+    """Small noisy linear regression: B_simple is real, positive, and the two
+    squared norms are far enough apart that f32 cancellation is harmless."""
+    key = jax.random.PRNGKey(7)
+    kw, kx, ke = jax.random.split(key, 3)
+    params = {
+        "w": jax.random.normal(kw, (24,)) * 0.3,
+        "b": jnp.zeros(()),
+        "m": jax.random.normal(jax.random.fold_in(kw, 1), (3, 5)) * 0.2,
+    }
+    x = jax.random.normal(kx, (16, 24))
+    y = x @ jax.random.normal(jax.random.fold_in(kw, 2), (24,)) + 0.5 * jax.random.normal(ke, (16,))
+
+    def loss_fn(p, batch):
+        xb, yb = batch
+        pred = xb @ p["w"] + p["b"] + jnp.sum(p["m"]) * 0.01
+        return jnp.mean((pred - yb) ** 2)
+
+    return loss_fn, params, (x, y)
+
+
+def _oracle_terms(loss_fn, params, batch, k):
+    """Brute force: every per-microbatch gradient materialized, norms in f64."""
+    mb = split_batch(batch, k)
+    gs = jax.vmap(jax.grad(loss_fn), in_axes=(None, 0))(params, mb)
+    stack = np.concatenate(
+        [np.asarray(g, np.float64).reshape(k, -1) for g in jax.tree_util.tree_leaves(gs)],
+        axis=1,
+    )  # (k, P)
+    g2_small = float(np.mean(np.sum(stack**2, axis=1)))
+    g2_big = float(np.sum(stack.mean(axis=0) ** 2))
+    return g2_small, g2_big
+
+
+@pytest.mark.parametrize("backend", [Backend.all_fused(), Backend.all_reference()])
+def test_estimator_matches_brute_force_oracle(backend):
+    loss_fn, params, batch = _linreg()
+    k, b_big = 4, 16
+    b_small = b_big / k
+    _, _, stats = grad_stats(loss_fn, params, batch, k, backend=backend)
+    est = ns.estimate(stats, b_small=b_small, b_big=b_big)
+
+    g2_small, g2_big = _oracle_terms(loss_fn, params, batch, k)
+    tr_sigma = (g2_small - g2_big) / (1 / b_small - 1 / b_big)
+    g2 = (b_big * g2_big - b_small * g2_small) / (b_big - b_small)
+    assert np.allclose(float(est.g2_small), g2_small, rtol=1e-5)
+    assert np.allclose(float(est.g2_big), g2_big, rtol=1e-5)
+    assert np.allclose(float(est.tr_sigma), tr_sigma, rtol=1e-5)
+    assert np.allclose(float(est.g2), g2, rtol=1e-5)
+    assert np.allclose(float(est.b_simple), tr_sigma / g2, rtol=1e-5)
+
+
+def test_flat_and_tree_terms_agree():
+    loss_fn, params, batch = _linreg()
+    _, _, flat = grad_stats(loss_fn, params, batch, 4, backend=Backend.all_fused())
+    _, _, tree = grad_stats(loss_fn, params, batch, 4, backend=Backend.all_reference())
+    tf, tt = ns.noise_terms(flat), ns.noise_terms(tree)
+    assert np.allclose(float(tf.g2_small), float(tt.g2_small), rtol=1e-6)
+    assert np.allclose(float(tf.g2_big), float(tt.g2_big), rtol=1e-6)
+
+
+def test_per_leaf_decomposition_sums_to_totals():
+    loss_fn, params, batch = _linreg()
+    _, _, stats = grad_stats(loss_fn, params, batch, 4, backend=Backend.all_fused())
+    t = ns.noise_terms(stats, per_leaf=True)
+    assert t.per_leaf.shape == (stats.mean.layout.n_leaves, 2)
+    assert np.allclose(float(jnp.sum(t.per_leaf[:, 0])), float(t.g2_big), rtol=1e-6)
+    assert np.allclose(float(jnp.sum(t.per_leaf[:, 1])), float(t.g2_small), rtol=1e-6)
+
+
+def test_b_simple_invariant_to_leaf_packing_order():
+    """Permuting the FlatBuffer's leaf packing order (different layouts, same
+    tensors) must not move the estimate — it's a sum over elements."""
+    key = jax.random.PRNGKey(3)
+    leaves = [
+        jax.random.normal(jax.random.fold_in(key, i), shape)
+        for i, shape in enumerate([(517,), (3,), (64, 129), (3, 5, 7)])
+    ]
+    sq = [jnp.square(x) + 0.1 for x in leaves]  # valid E[g²] >= E[g]²
+    perm = [2, 0, 3, 1]
+
+    def stats_for(order):
+        mean = as_flat(tuple(leaves[i] for i in order))
+        sq_mean = as_flat(tuple(sq[i] for i in order), layout=mean.layout)
+        return GradStats(mean=mean, sq_mean=sq_mean, k=4)
+
+    e1 = ns.estimate(stats_for(range(4)), b_small=4, b_big=16)
+    e2 = ns.estimate(stats_for(perm), b_small=4, b_big=16)
+    assert np.allclose(float(e1.b_simple), float(e2.b_simple), rtol=1e-6)
+    assert np.allclose(float(e1.tr_sigma), float(e2.tr_sigma), rtol=1e-6)
+    assert np.allclose(float(e1.g2), float(e2.g2), rtol=1e-6)
+
+
+def test_ema_matches_snippets_reference():
+    """ns.ema IS the gpt-neox ema (SNIPPETS §1): same biased average, same
+    1/(1-beta^(i+1)) debias, same None -> 0 seeding."""
+
+    def snippet_ema(avg, beta, yi, i):
+        if avg is None:
+            avg = 0
+        avg = beta * avg + (1 - beta) * yi
+        return avg, avg / (1 - beta ** (i + 1))
+
+    beta, values = 0.9, [3.0, -1.0, 4.0, 1.5, 9.2, 2.6]
+    ours, theirs = None, None
+    for i, y in enumerate(values):
+        ours, ours_hat = ns.ema(ours, beta, y, i)
+        theirs, theirs_hat = snippet_ema(theirs, beta, y, i)
+        assert ours == pytest.approx(theirs)
+        assert ours_hat == pytest.approx(theirs_hat)
+    # a constant signal debiases to itself immediately
+    _, hat = ns.ema(None, 0.99, 5.0, 0)
+    assert hat == pytest.approx(5.0)
+
+
+def test_update_noise_state_smooths_terms_not_the_ratio():
+    st = ns.init_noise_state()
+    noise_ref = signal_ref = None
+    for i, (tr, g2) in enumerate([(8.0, 2.0), (12.0, 3.0), (6.0, 1.0)]):
+        st, sm = ns.update_noise_state(st, tr, g2, beta=0.8)
+        noise_ref, nh = ns.ema(noise_ref, 0.8, tr, i)
+        signal_ref, sh = ns.ema(signal_ref, 0.8, g2, i)
+        assert sm.noise == pytest.approx(nh)
+        assert sm.signal == pytest.approx(sh)
+        assert sm.b_simple == pytest.approx(nh / sh)
+    assert st.count == 3
+
+
+def test_estimator_input_validation():
+    stats = GradStats(mean={"w": jnp.ones(4)}, sq_mean=None, k=4)
+    with pytest.raises(ValueError, match="sq_mean"):
+        ns.noise_terms(stats)
+    with pytest.raises(ValueError, match="b_big > b_small"):
+        ns.estimate_from_terms(1.0, 1.0, b_small=8, b_big=8)

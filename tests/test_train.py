@@ -175,3 +175,28 @@ def test_loss_norm_document_trains_and_logs_pack_efficiency():
 def test_loss_norm_validation():
     with pytest.raises(ValueError, match="loss_norm"):
         make_loss_fn(TINY.replace(loss_norm="sequence"))
+
+
+def test_eval_loss_weights_ragged_final_batch_by_live_tokens():
+    """An eval stream whose last batch is mostly padding (2 of 8 rows real,
+    marked via mask): eval_loss must weight it by its REAL token count, i.e.
+    exactly match the hand-computed token-weighted mean — not the plain mean
+    over batches that would give the ragged tail a full batch's vote."""
+    cfg = TINY.replace(global_batch=8)
+    loss_fn = make_loss_fn(cfg)
+    state = init_state(cfg)
+    full = next(iter(lm_batches(64, 8, 32, seed=0, stream_seed=5)))
+    tail = next(iter(lm_batches(64, 8, 32, seed=0, stream_seed=6)))
+    s = tail["tokens"].shape[1]
+    mask = np.zeros((8, s), np.float32)
+    mask[:2] = 1.0  # only the first 2 rows of the final batch are real
+    tail = dict(tail, mask=jnp.asarray(mask))
+
+    got = eval_loss(cfg, loss_fn, state.params, [full, tail])
+    l_full = float(loss_fn(state.params, full)[0])
+    l_tail = float(loss_fn(state.params, tail)[0])
+    w_full, w_tail = 8 * s, 2 * s
+    want = (l_full * w_full + l_tail * w_tail) / (w_full + w_tail)
+    assert got == pytest.approx(want, rel=1e-6)
+    # the unweighted mean is measurably different on this stream
+    assert got != pytest.approx((l_full + l_tail) / 2, rel=1e-4)
