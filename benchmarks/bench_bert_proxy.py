@@ -8,15 +8,20 @@ each batch size with sqrt-scaled LR and a fixed token budget, so larger
 batches get proportionally fewer steps, exactly the paper's stressor.
 
 Second half: the autoscale A/B.  Fixed-k vs GSNR-driven batch autoscaling
-(train/autoscale.py) at MATCHED token budgets; the machine-readable record —
-including the measured B_simple and k trajectories — lands in
-BENCH_autoscale.json (schema in docs/autoscale.md).
+(train/autoscale.py) at MATCHED token budgets, both arms fed from ONE
+on-disk indexed token cache (repro.data.memmap): the corpus is synthesized
+and packed once, the budget spans multiple epochs of it (deterministic
+per-epoch reshuffles), and the autoscaled arm drives the LOADER batch —
+each step gathers exactly k × mb_rows rows off the epoch's pack index.
+The machine-readable record — including the measured B_simple, k, and
+epoch trajectories — lands in BENCH_autoscale.json (docs/autoscale.md).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import tempfile
 import time
 
 import jax
@@ -26,7 +31,13 @@ from benchmarks.common import check_plans_agree, emit
 from repro.backend import resolve_backend
 from repro.configs import get_smoke
 from repro.core import sqrt_scaled_lr
-from repro.data import lm_batches
+from repro.data import (
+    IndexedPackedDataset,
+    TokenCache,
+    lm_batches,
+    markov_documents,
+    write_token_cache,
+)
 from repro.train import eval_loss, make_loss_fn, train_loop
 from repro.train.autoscale import AutoscalePolicy, autoscale_train_loop
 
@@ -35,8 +46,11 @@ BENCH_AUTOSCALE = os.path.join(os.path.dirname(__file__), "..", "BENCH_autoscale
 
 def _autoscale_ab(cfg0, fast: bool) -> None:
     """Fixed-k vs autoscaled at the same token budget, same model, same
-    stream.  The autoscaled arm must move k at least once from the MEASURED
-    B_simple — a run where the policy never fires is a vacuous A/B."""
+    on-disk cache.  The corpus is written/packed ONCE; the budget spans
+    several epochs of it, so both arms revisit the data under deterministic
+    per-epoch reshuffles instead of re-synthesizing docs.  The autoscaled
+    arm must move k at least once from the MEASURED B_simple — a run where
+    the policy never fires is a vacuous A/B."""
     seq = cfg0.seq_len
     mb_rows, k0 = 4, 2
     policy = AutoscalePolicy(
@@ -47,31 +61,49 @@ def _autoscale_ab(cfg0, fast: bool) -> None:
         warmup_steps=0, k=k0, base_batch=mb_rows * k0, lr_scale_rule="sqrt",
     )
     cfg = cfg0.replace(global_batch=mb_rows * k0, optimizer=opt)
-    mb_tokens = mb_rows * (seq - 1)  # lm_batches targets drop one position
+    vocab = cfg.model.vocab_size
+    mb_tokens = mb_rows * seq  # packed rows: every slot counts to the budget
     budget = (20 if fast else 60) * k0 * mb_tokens
 
-    test_batches = [next(iter(lm_batches(cfg.model.vocab_size, 32, seq, seed=0,
-                                         stream_seed=888)))]
-    loss_fn = make_loss_fn(cfg)
+    with tempfile.TemporaryDirectory() as d_train, tempfile.TemporaryDirectory() as d_eval:
+        # one cache sized to ~half the budget ⇒ each arm crosses epochs
+        write_token_cache(
+            markov_documents(vocab, budget // 2, 6, 2 * seq, seed=0, stream_seed=1),
+            d_train, vocab=vocab,
+        )
+        write_token_cache(
+            markov_documents(vocab, 32 * seq, 6, 2 * seq, seed=0, stream_seed=888),
+            d_eval, vocab=vocab,
+        )
+        train_cache = TokenCache(d_train)
+        eval_ds = IndexedPackedDataset(TokenCache(d_eval), seq_len=seq, batch_rows=32)
+        loss_fn = make_loss_fn(cfg)
 
-    # fixed-k arm: classic train_loop at effective batch k0*mb_rows
-    steps_fixed = budget // (k0 * mb_tokens)
-    stream = lm_batches(cfg.model.vocab_size, k0 * mb_rows, seq, seed=0, stream_seed=1)
-    t0 = time.time()
-    # log_every=steps records the first and last step (train_loop only
-    # appends history rows on log ticks)
-    state_f, hist_f = train_loop(cfg, stream, steps=steps_fixed, log_every=steps_fixed)
-    wall_fixed = time.time() - t0
-    te_fixed = eval_loss(cfg, loss_fn, state_f.params, test_batches)
+        # fixed-k arm: classic train_loop over the indexed stream at the
+        # frozen effective batch k0*mb_rows
+        steps_fixed = budget // (k0 * mb_tokens)
+        ds_fixed = IndexedPackedDataset(
+            train_cache, seq_len=seq, batch_rows=k0 * mb_rows, seed=0
+        )
+        t0 = time.time()
+        # log_every=steps records the first and last step (train_loop only
+        # appends history rows on log ticks)
+        state_f, hist_f = train_loop(
+            cfg, ds_fixed.iter_batches(), steps=steps_fixed, log_every=steps_fixed
+        )
+        wall_fixed = time.time() - t0
+        epochs_fixed = int(ds_fixed.state.epoch)
+        te_fixed = eval_loss(cfg, loss_fn, state_f.params, eval_ds)
 
-    # autoscaled arm: SAME microbatch stream geometry, token-budget stop
-    mbs = lm_batches(cfg.model.vocab_size, mb_rows, seq, seed=0, stream_seed=1)
-    t0 = time.time()
-    state_a, hist_a = autoscale_train_loop(
-        cfg, mbs, policy=policy, loss_fn=loss_fn, token_budget=budget
-    )
-    wall_auto = time.time() - t0
-    te_auto = eval_loss(cfg, loss_fn, state_a.params, test_batches)
+        # autoscaled arm: SAME cache, loader-driven — each step gathers
+        # k × mb_rows rows off the epoch pack index; token-budget stop
+        ds_auto = IndexedPackedDataset(train_cache, seq_len=seq, batch_rows=mb_rows, seed=0)
+        t0 = time.time()
+        state_a, hist_a = autoscale_train_loop(
+            cfg, ds_auto, policy=policy, loss_fn=loss_fn, token_budget=budget
+        )
+        wall_auto = time.time() - t0
+        te_auto = eval_loss(cfg, loss_fn, state_a.params, eval_ds)
 
     ks = [row["k"] for row in hist_a]
     n_changes = sum(1 for a, b in zip(ks, ks[1:]) if a != b) + (ks[0] != k0)
@@ -80,10 +112,12 @@ def _autoscale_ab(cfg0, fast: bool) -> None:
     )
 
     emit("bert_autoscale_fixed", 0.0,
-         f"eval_loss={te_fixed:.4f};steps={steps_fixed};k={k0};tokens={budget}")
+         f"eval_loss={te_fixed:.4f};steps={steps_fixed};k={k0};tokens={budget};"
+         f"epochs={epochs_fixed}")
     emit("bert_autoscale_auto", 0.0,
          f"eval_loss={te_auto:.4f};steps={len(hist_a)};k_final={ks[-1]};"
-         f"k_changes={n_changes};tokens={hist_a[-1]['tokens']}")
+         f"k_changes={n_changes};tokens={hist_a[-1]['tokens']};"
+         f"epochs={hist_a[-1]['epoch']}")
 
     plan = resolve_backend(cfg.parallel, where="bench_bert_proxy")
     rec = {
@@ -94,21 +128,30 @@ def _autoscale_ab(cfg0, fast: bool) -> None:
             "lr_scale_rule": opt.lr_scale_rule,
         },
         "policy": dataclasses.asdict(policy),
+        "data": {
+            # both arms share one indexed cache; the budget spans epochs
+            "cache_tokens": int(train_cache.n_tokens),
+            "cache_docs": int(train_cache.n_docs),
+            "pack_efficiency": float(hist_a[-1].get("pack_efficiency", 0.0)),
+        },
         "fixed": {
             "k": k0, "steps": steps_fixed, "tokens": steps_fixed * k0 * mb_tokens,
             "eval_loss": float(te_fixed), "final_train_loss": float(hist_f[-1]["loss"]),
-            "wall_s": wall_fixed,
+            "wall_s": wall_fixed, "epochs": epochs_fixed,
         },
         "autoscaled": {
             "steps": len(hist_a), "tokens": int(hist_a[-1]["tokens"]),
             "eval_loss": float(te_auto), "final_train_loss": float(hist_a[-1]["loss"]),
             "wall_s": wall_auto, "k_final": ks[-1], "k_changes": int(n_changes),
+            "epochs": int(hist_a[-1]["epoch"]),
             # the trajectories the record schema promises (docs/autoscale.md):
-            # per-step k, raw B_simple, its EMA, and the live-rescaled LR
+            # per-step k, raw B_simple, its EMA, the live-rescaled LR, and
+            # the data-epoch cursor of the loader-driven batches
             "k_trajectory": ks,
             "b_simple_trajectory": [round(row["b_simple"], 3) for row in hist_a],
             "b_simple_ema_trajectory": [round(row["b_simple_ema"], 3) for row in hist_a],
             "lr_trajectory": [round(row["lr"], 8) for row in hist_a],
+            "epoch_trajectory": [int(row["epoch"]) for row in hist_a],
         },
         "plan": plan.describe(),
         "interpret": plan.interpret_mode(),

@@ -1,0 +1,168 @@
+"""Data-path cost: build-once indexed cache vs per-batch first-fit packing.
+
+Two numbers the production data path (docs/data.md) promises:
+
+  1. build cost is PAID ONCE — streaming the corpus into the token memmap
+     plus one first-fit pass per epoch to build the pack index; and
+  2. steady-state batch assembly is a pure ``np.take`` gather off the
+     precomputed index, which must beat running ``pack_sequences`` (python
+     first-fit + per-doc copies) on every batch.
+
+The machine-readable record lands in BENCH_data.json (plan/config-stamped so
+benchmarks/run.py's validate_bench_plans gate covers it), and the cache is
+validated in-process through repro.data.check — the same checker the verify
+skill runs from the CLI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import check_configs_agree, check_plans_agree, emit
+from repro.backend import resolve_backend
+from repro.configs import get_smoke
+from repro.data import (
+    IndexedPackedDataset,
+    TokenCache,
+    markov_documents,
+    pack_sequences,
+    write_token_cache,
+)
+from repro.data.check import check_cache
+
+BENCH_DATA = os.path.join(os.path.dirname(__file__), "..", "BENCH_data.json")
+
+
+def _split_pairs(doc: np.ndarray, seq_len: int):
+    """A stored doc (trailing next-token included) as the row-sized
+    (tokens, targets) chunk pairs pack_sequences accepts — the same
+    pre-split the pack index applies to docs longer than a row."""
+    toks, tgts = doc[:-1], doc[1:]
+    return [
+        (toks[s : s + seq_len], tgts[s : s + seq_len])
+        for s in range(0, toks.size, seq_len)
+    ]
+
+
+def _baseline_pack_epoch(docs, seq_len: int, batch_rows: int):
+    """Per-batch ``pack_sequences`` over one epoch: accumulate docs until a
+    batch's worth of rows is covered, then first-fit pack that group — the
+    training-time cost the index path amortizes away.  Pre-splitting is NOT
+    timed (the baseline gets it for free); returns (rows_emitted, seconds)."""
+    pairs = [p for d in docs for p in _split_pairs(d, seq_len)]
+    rows = 0
+    t0 = time.perf_counter()
+    buf, buf_tokens = [], 0
+    for p in pairs:
+        buf.append(p)
+        buf_tokens += p[0].size
+        if buf_tokens >= batch_rows * seq_len:
+            rows += pack_sequences(buf, seq_len)["tokens"].shape[0]
+            buf, buf_tokens = [], 0
+    if buf:
+        rows += pack_sequences(buf, seq_len)["tokens"].shape[0]
+    return rows, time.perf_counter() - t0
+
+
+def main(fast: bool = False) -> None:
+    t0_all = time.time()
+    vocab, seq_len, batch_rows = 256, 128, 32
+    total_tokens = 150_000 if fast else 600_000
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        write_token_cache(
+            markov_documents(vocab, total_tokens, 8, 3 * seq_len, seed=0, stream_seed=1),
+            d,
+            dtype=np.uint16,
+            vocab=vocab,
+        )
+        cache_build_s = time.perf_counter() - t0
+
+        cache = TokenCache(d)
+        ds = IndexedPackedDataset(cache, seq_len=seq_len, batch_rows=batch_rows, seed=0)
+        t0 = time.perf_counter()
+        pack = ds.pack_for(0)
+        index_build_s = time.perf_counter() - t0
+
+        findings = check_cache(d, seq_len=seq_len, vocab=vocab)
+        if findings:
+            raise AssertionError(f"repro.data.check found problems: {findings}")
+
+        # steady state: one full epoch of gather batches (index already built)
+        n_batches = pack.n_rows // batch_rows
+        t0 = time.perf_counter()
+        for _ in range(n_batches):
+            ds.next_batch()
+        gather_s = time.perf_counter() - t0
+        indexed_bps = n_batches / gather_s
+
+        # the same epoch again, consumed through the background prefetcher
+        it = ds.iter_batches(prefetch_size=2)
+        next(it)  # thread spin-up outside the timed region
+        t0 = time.perf_counter()
+        for _ in range(n_batches - 1):
+            next(it)
+        prefetch_s = time.perf_counter() - t0
+        prefetch_bps = (n_batches - 1) / prefetch_s
+        it.close()
+
+        docs = [cache.doc(i) for i in cache.epoch_order(0, 0)]
+
+    base_rows, base_s = _baseline_pack_epoch(docs, seq_len, batch_rows)
+    baseline_bps = (base_rows / batch_rows) / base_s
+
+    emit("data_cache_build", cache_build_s * 1e6, f"tokens={cache.n_tokens};docs={cache.n_docs}")
+    emit("data_index_build", index_build_s * 1e6,
+         f"rows={pack.n_rows};pack_eff={pack.pack_efficiency:.3f}")
+    emit("data_gather_batch", gather_s / n_batches * 1e6,
+         f"batches_per_s={indexed_bps:.1f};rows={batch_rows}")
+    emit("data_prefetch_batch", prefetch_s / max(n_batches - 1, 1) * 1e6,
+         f"batches_per_s={prefetch_bps:.1f}")
+    emit("data_pack_sequences_batch", base_s / max(base_rows // batch_rows, 1) * 1e6,
+         f"batches_per_s={baseline_bps:.1f}")
+    emit("data_speedup", 0.0, f"gather_vs_pack={indexed_bps / baseline_bps:.2f}x")
+
+    assert indexed_bps > baseline_bps, (
+        f"indexed gather ({indexed_bps:.1f} batches/s) must beat per-batch "
+        f"pack_sequences ({baseline_bps:.1f} batches/s)"
+    )
+
+    plan = resolve_backend(get_smoke("granite-3-2b").parallel, where="bench_data")
+    rec = {
+        "config": {
+            "data.vocab": vocab, "data.seq_len": seq_len, "data.batch_rows": batch_rows,
+            "data.total_tokens": int(cache.n_tokens), "data.n_docs": int(cache.n_docs),
+            "data.dtype": "uint16",
+        },
+        "build": {
+            "cache_s": cache_build_s,
+            "epoch_index_s": index_build_s,
+            "pack_efficiency": float(pack.pack_efficiency),
+            "rows_per_epoch": int(pack.n_rows),
+        },
+        "steady_state": {
+            "indexed_batches_per_s": indexed_bps,
+            "prefetched_batches_per_s": prefetch_bps,
+            "pack_sequences_batches_per_s": baseline_bps,
+            "speedup": indexed_bps / baseline_bps,
+        },
+        "check": {"findings": len(findings)},
+        "plan": plan.describe(),
+        "interpret": plan.interpret_mode(),
+        "backend": jax.default_backend(),
+    }
+    check_plans_agree(rec, what="bench_data record")
+    check_configs_agree(rec, what="bench_data record")
+    with open(BENCH_DATA, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"# wrote {os.path.abspath(BENCH_DATA)}")
+    print(f"# bench_data done in {time.time()-t0_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

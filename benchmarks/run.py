@@ -1,6 +1,7 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness — one module per paper table/figure:
 
+  bench_data         indexed-cache data path (build cost, gather vs re-pack)
   bench_linreg       Fig. 5 (convergence) + Fig. 4 (gamma/k sensitivity)
   bench_cifar_proxy  Table 6 / Fig. 3 (LB ablation across 4 optimizer pairs)
   bench_bert_proxy   Table 1 (pretraining quality vs batch, LAMB vs VR-LAMB)
@@ -25,6 +26,7 @@ import time
 import traceback
 
 MODULES = [
+    "data",
     "linreg",
     "cifar_proxy",
     "bert_proxy",
@@ -40,6 +42,7 @@ BENCH_JSONS = [
     os.path.join(_HERE, "..", "BENCH_flat_state.json"),
     os.path.join(_HERE, "..", "BENCH_serve.json"),
     os.path.join(_HERE, "..", "BENCH_autoscale.json"),
+    os.path.join(_HERE, "..", "BENCH_data.json"),
 ]
 
 

@@ -1,4 +1,17 @@
+from repro.data.memmap import (  # noqa: F401
+    DataState,
+    IndexedPackedDataset,
+    TokenCache,
+    load_meta,
+    write_token_cache,
+)
+from repro.data.pack_index import (  # noqa: F401
+    PackIndex,
+    build_pack_index,
+    gather_rows,
+)
 from repro.data.pipeline import (  # noqa: F401
+    device_prefetch,
     device_stream,
     host_slice,
     pack_sequences,
@@ -13,5 +26,6 @@ from repro.data.synthetic import (  # noqa: F401
     ctr_batches,
     linreg_data,
     lm_batches,
+    markov_documents,
     packed_lm_batches,
 )

@@ -163,34 +163,99 @@ def shard_batch(batch: Dict, mesh: Mesh, rules: Optional[Rules] = None) -> Dict:
     return jax.tree_util.tree_map(one, batch)
 
 
-def prefetch(it: Iterator, size: int = 2) -> Iterator:
-    """Background-thread prefetch of host batches."""
-    q: collections.deque = collections.deque()
-    lock = threading.Condition()
-    done = {"v": False}
+class _Prefetcher:
+    """Background-thread prefetch with prompt error propagation.
 
-    def worker():
-        for item in it:
-            with lock:
-                while len(q) >= size:
-                    lock.wait()
-                q.append(item)
-                lock.notify_all()
-        with lock:
-            done["v"] = True
-            lock.notify_all()
+    - A producer exception is re-raised on the CONSUMER side as soon as the
+      consumer asks for the next item — ahead of any still-queued items, and
+      with the original worker-thread traceback attached to the exception
+      (the old generator hung forever once the queue drained: the dead
+      worker never set its done flag).
+    - ``close()`` stops the producer cleanly: the worker wakes from its
+      backpressure wait, exits, and is joined.
+    """
 
-    t = threading.Thread(target=worker, daemon=True)
-    t.start()
-    while True:
-        with lock:
-            while not q and not done["v"]:
-                lock.wait()
-            if not q and done["v"]:
-                return
-            item = q.popleft()
-            lock.notify_all()
-        yield item
+    def __init__(self, it: Iterator, size: int):
+        if size < 1:
+            raise ValueError(f"prefetch size={size} must be >= 1")
+        self._q: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._size = size
+        self._done = False
+        self._exc: Optional[BaseException] = None
+        self._stop = False
+        self._thread = threading.Thread(target=self._work, args=(it,), daemon=True)
+        self._thread.start()
+
+    def _work(self, it: Iterator) -> None:
+        try:
+            for item in it:
+                with self._cv:
+                    while len(self._q) >= self._size and not self._stop:
+                        self._cv.wait()
+                    if self._stop:
+                        return
+                    self._q.append(item)
+                    self._cv.notify_all()
+        except BaseException as e:  # noqa: BLE001 — handed to the consumer
+            with self._cv:
+                self._exc = e
+                self._cv.notify_all()
+            return
+        with self._cv:
+            self._done = True
+            self._cv.notify_all()
+
+    def __iter__(self) -> "_Prefetcher":
+        return self
+
+    def __next__(self):
+        with self._cv:
+            while True:
+                if self._exc is not None:
+                    self._stop = True
+                    self._cv.notify_all()
+                    # the exception object carries the worker's traceback;
+                    # re-raising chains the consumer frame onto it
+                    raise self._exc
+                if self._q:
+                    item = self._q.popleft()
+                    self._cv.notify_all()
+                    return item
+                if self._done:
+                    raise StopIteration
+                self._cv.wait()
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5)
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:  # pragma: no cover — interpreter shutdown
+            pass
+
+
+def prefetch(it: Iterator, size: int = 2) -> _Prefetcher:
+    """Background-thread prefetch of host batches (errors propagate promptly;
+    ``.close()`` stops the worker)."""
+    return _Prefetcher(it, size)
+
+
+def device_prefetch(it: Iterator, size: int = 2, mesh: Optional[Mesh] = None) -> _Prefetcher:
+    """Double-buffered host->device pipeline: each batch is placed on device
+    (sharded when a mesh is given) INSIDE the producer thread, so the
+    transfer overlaps the running step instead of serializing with it."""
+
+    def place(batch):
+        if mesh is not None:
+            return shard_batch(host_slice(batch), mesh)
+        return jax.tree_util.tree_map(jax.numpy.asarray, batch)
+
+    return prefetch((place(b) for b in it), size)
 
 
 def device_stream(it: Iterator, mesh: Optional[Mesh] = None, prefetch_size: int = 2):

@@ -115,6 +115,41 @@ def packed_lm_batches(
         yield {k_: v[:batch] for k_, v in rows.items()}
 
 
+def markov_documents(
+    vocab: int,
+    total_tokens: int,
+    min_doc: int,
+    max_doc: int,
+    seed: int = 0,
+    stream_seed: int = 1,
+    chunk: int = 64,
+) -> Iterator[np.ndarray]:
+    """Finite stream of variable-length Markov documents totalling at least
+    ``total_tokens`` STORED tokens — the doc source for building indexed
+    memmap caches (repro.data.write_token_cache).
+
+    Each yielded doc stores n+1 tokens (n in [min_doc, max_doc]): the last
+    token is the trailing next-token target, so a cache-backed pack trains
+    the same (doc[:-1], doc[1:]) pairs as packed_lm_batches.  Docs are drawn
+    ``chunk`` at a time from one vectorized chain.sample call (the per-token
+    python loop is over chunks, not documents).
+    """
+    if not (1 <= min_doc <= max_doc):
+        raise ValueError(f"need 1 <= min_doc <= max_doc, got {min_doc}, {max_doc}")
+    chain = MarkovLM(vocab, seed=seed)
+    rng = np.random.RandomState(stream_seed)
+    emitted = 0
+    while emitted < total_tokens:
+        lens = rng.randint(min_doc, max_doc + 1, size=chunk)
+        toks = chain.sample(chunk, int(lens.max()), rng)
+        for i in range(chunk):
+            if emitted >= total_tokens:
+                return
+            doc = toks[i, : int(lens[i]) + 1]
+            emitted += doc.size
+            yield doc
+
+
 # ---------------------------------------------------------------------------
 # classification (CIFAR10 proxy)
 # ---------------------------------------------------------------------------

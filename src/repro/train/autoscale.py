@@ -127,12 +127,21 @@ def autoscale_train_loop(
 ) -> Tuple[TrainState, list]:
     """Autoscaled driver. Returns (state, history).
 
-    ``microbatches`` yields FIXED-size microbatches; each optimizer step
-    concatenates k of them (effective batch = k × microbatch rows), so any k
-    trivially satisfies split_batch's divisibility contract.  Stops after
-    ``steps`` optimizer steps or once ``token_budget`` tokens are consumed
-    (whichever comes first; at least one must be given) — a budget stop is
-    what makes fixed-k vs autoscaled A/Bs comparable.
+    ``microbatches`` is either
+
+      - an iterator of FIXED-size microbatches: each optimizer step
+        concatenates k of them (effective batch = k × microbatch rows), so
+        any k trivially satisfies split_batch's divisibility contract; or
+      - an :class:`repro.data.IndexedPackedDataset`: the loop then drives
+        the LOADER batch — each step requests exactly k × batch_rows packed
+        rows straight from the epoch's pack index (a pure gather), so a k
+        change re-requests rows instead of concatenating/re-slicing a fixed
+        host batch, and history rows additionally carry the data epoch and
+        the epoch's pack_efficiency.
+
+    Stops after ``steps`` optimizer steps or once ``token_budget`` token
+    SLOTS are consumed (whichever comes first; at least one must be given) —
+    a budget stop is what makes fixed-k vs autoscaled A/Bs comparable.
 
     Every history row records step/k/effective_batch/loss/lr/b_simple/
     b_simple_ema/tokens — the B_simple trajectory benches persist into BENCH
@@ -147,14 +156,22 @@ def autoscale_train_loop(
     opt_cfg = cfg.optimizer
     loss_fn = loss_fn or make_loss_fn(cfg)
 
-    it = iter(microbatches)
-    first = next(it)
-    mb_rows = int(jax.tree_util.tree_leaves(first)[0].shape[0])
-    mb_tokens = (
-        int(np.asarray(first["tokens"]).size)
-        if isinstance(first, dict) and "tokens" in first
-        else mb_rows
-    )
+    indexed = hasattr(microbatches, "next_batch") and hasattr(microbatches, "batch_rows")
+    if indexed:
+        ds = microbatches
+        mb_rows = int(ds.batch_rows)
+        mb_tokens = mb_rows * int(ds.seq_len)
+        it, pending = None, []
+    else:
+        it = iter(microbatches)
+        first = next(it)
+        mb_rows = int(jax.tree_util.tree_leaves(first)[0].shape[0])
+        mb_tokens = (
+            int(np.asarray(first["tokens"]).size)
+            if isinstance(first, dict) and "tokens" in first
+            else mb_rows
+        )
+        pending = [first]
 
     def cfg_for(k: int) -> Config:
         return cfg.replace(
@@ -178,7 +195,6 @@ def autoscale_train_loop(
     state = state._replace(k=k)
 
     noise_st = ns.init_noise_state()
-    pending = [first]
     consumed = 0
     last_change: Optional[int] = None
     history = []
@@ -189,10 +205,16 @@ def autoscale_train_loop(
             break
         if token_budget is not None and consumed >= token_budget:
             break
-        while len(pending) < k:
-            pending.append(next(it))
-        mbs, pending = pending[:k], pending[k:]
-        batch = _tm(lambda *xs: np.concatenate([np.asarray(x) for x in xs], 0), *mbs)
+        if indexed:
+            # loader-driven batch: the pack index serves exactly k*mb_rows
+            # rows (epoch-spanning when needed) — no host concat, no
+            # re-slicing of a fixed batch
+            batch = ds.next_batch(k * mb_rows)
+        else:
+            while len(pending) < k:
+                pending.append(next(it))
+            mbs, pending = pending[:k], pending[k:]
+            batch = _tm(lambda *xs: np.concatenate([np.asarray(x) for x in xs], 0), *mbs)
         state, metrics = step_fn_for(k)(state, batch)
         consumed += k * mb_tokens
         noise_st, smoothed = ns.update_noise_state(
@@ -212,6 +234,11 @@ def autoscale_train_loop(
             "tokens": consumed,
             "wall": time.time() - t0,
         }
+        if indexed:
+            row["epoch"] = int(ds.state.epoch)
+            pe = ds.last_pack_efficiency
+            if pe is not None:
+                row["pack_efficiency"] = float(pe)
         history.append(row)
         if log_every and (i % log_every == 0):
             print(

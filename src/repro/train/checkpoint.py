@@ -63,9 +63,17 @@ def _restore_expanded(data, like: PyTree) -> PyTree:
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = data[key]
-        if tuple(arr.shape) != tuple(leaf.shape):
-            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
-        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        # np.asarray normalizes plain-scalar template leaves (python ints in
+        # e.g. a data-loader DataState) so they round-trip like arrays
+        tmpl = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {tmpl.shape}")
+        if isinstance(leaf, jax.Array):
+            leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+        else:
+            # host-side templates (e.g. DataState int64 cursors) keep their
+            # exact numpy dtype — jnp would truncate int64 without x64 mode
+            leaves.append(np.asarray(arr, dtype=tmpl.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

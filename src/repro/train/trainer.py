@@ -189,7 +189,14 @@ def eval_loss(cfg: Config, loss_fn, params, batches: Iterable) -> float:
     Each batch's token-mean loss is weighted by its REAL (non-pad) token
     count, so a ragged/padded final batch counts in proportion to the tokens
     it actually holds instead of skewing the average with a full batch's
-    weight."""
+    weight.
+
+    ``batches`` may also be an IndexedPackedDataset (repro.data.memmap): one
+    finite epoch pass is evaluated (epoch_batches), whose padded final batch
+    weighs exactly its live tokens — multi-run A/Bs can then share one
+    on-disk cache instead of re-synthesizing eval docs per run."""
+    if hasattr(batches, "epoch_batches"):
+        batches = batches.epoch_batches()
     f = jax.jit(lambda p, b: loss_fn(p, b)[0])
     total = weight = 0.0
     for b in batches:

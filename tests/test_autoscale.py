@@ -220,3 +220,62 @@ def test_noise_scale_step_logs_the_estimate():
     assert np.isfinite(float(metrics["noise/tr_sigma"]))
     # k rides through the jitted step untouched
     assert new_state.k is state.k
+
+
+# ---------------------------------------------------------------------------
+# loader-driven mode: an IndexedPackedDataset makes the loop request
+# exactly k × batch_rows packed rows per step from the pack index
+# ---------------------------------------------------------------------------
+
+
+def test_autoscale_loop_drives_the_loader_batch():
+    """With an IndexedPackedDataset the loop must re-request rows on a k
+    change (never concatenate fixed microbatches), and history rows carry
+    the data epoch + that epoch's pack_efficiency."""
+    from repro.data import IndexedPackedDataset, markov_documents, write_token_cache
+
+    cfg = TINY.replace(
+        optimizer=dataclasses.replace(
+            TINY.optimizer, k=2, base_batch=8, lr_scale_rule="sqrt", lr=1e-3,
+            schedule="constant", warmup_steps=0,
+        ),
+        global_batch=8,
+        seq_len=32,
+    )
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        write_token_cache(
+            markov_documents(cfg.model.vocab_size, 4000, 5, 60, seed=0, stream_seed=1), d
+        )
+        from repro.data import TokenCache
+
+        ds = IndexedPackedDataset(TokenCache(d), seq_len=cfg.seq_len, batch_rows=4, seed=0)
+
+        requested = []
+        real_next = ds.next_batch
+
+        def spy(rows=None):
+            requested.append(int(rows if rows is not None else ds.batch_rows))
+            return real_next(rows)
+
+        ds.next_batch = spy
+        pol = AutoscalePolicy(
+            k_min=2, k_max=16, warmup_steps=3, cooldown=2, hysteresis=1.25, ema_beta=0.8
+        )
+        state, hist = autoscale_train_loop(cfg, ds, steps=10, policy=pol)
+
+    ks = [row["k"] for row in hist]
+    assert len(set(ks)) > 1, f"k never moved: {ks}"
+    # every step requested exactly k × batch_rows rows from the loader
+    assert requested == [k * 4 for k in ks]
+    # history carries the data-epoch cursor and the epoch's pack efficiency
+    for row in hist:
+        assert row["epoch"] >= 0
+        assert 0.0 < row["pack_efficiency"] <= 1.0
+        assert row["effective_batch"] == row["k"] * 4
+    # LR still tracks the sqrt rule at the LIVE effective batch
+    for row in hist:
+        want = 1e-3 * math.sqrt(row["effective_batch"] / 8)
+        assert row["lr"] == pytest.approx(want, rel=1e-5)
+    assert int(state.k) == ks[-1]

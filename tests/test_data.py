@@ -106,6 +106,101 @@ def test_packed_lm_batches_contract():
                 raise AssertionError((r, t))
 
 
+def test_prefetch_propagates_worker_error_promptly():
+    """A raising source iterator must fail the consumer loop with the
+    ORIGINAL exception (worker-thread traceback attached) — and promptly:
+    ahead of any still-queued items, never by hanging after a drain."""
+    import traceback as tb
+
+    from repro.data import prefetch
+
+    def _raiser():
+        yield from range(5)
+        raise RuntimeError("boom at item 5")
+
+    it = prefetch(_raiser(), size=2)
+    got = []
+    with pytest.raises(RuntimeError, match="boom at item 5") as ei:
+        for item in it:
+            got.append(item)
+    frames = "".join(tb.format_tb(ei.value.__traceback__))
+    assert "_raiser" in frames  # original worker traceback, not a re-wrap
+    assert len(got) <= 5
+
+    # raising before ANY item: the first next() raises instead of hanging
+    def _immediate():
+        raise ValueError("dead on arrival")
+        yield  # pragma: no cover
+
+    with pytest.raises(ValueError, match="dead on arrival"):
+        next(prefetch(_immediate(), size=2))
+
+
+def test_prefetch_error_preempts_queued_items():
+    """Prompt propagation: once the producer has died, the consumer sees the
+    error on its NEXT request even when items are still queued."""
+    import time as _time
+
+    from repro.data import prefetch
+
+    def _src():
+        yield 1
+        yield 2
+        raise RuntimeError("late boom")
+
+    it = prefetch(_src(), size=4)  # queue holds both items before the raise
+    _time.sleep(0.2)  # let the producer run to its exception
+    with pytest.raises(RuntimeError, match="late boom"):
+        next(it)
+
+
+def test_prefetch_close_stops_worker_and_exhaustion_is_clean():
+    import itertools
+
+    from repro.data import prefetch
+
+    # clean close on an INFINITE source: worker must exit, not linger
+    it = prefetch(itertools.count(), size=2)
+    assert next(it) == 0
+    assert next(it) == 1
+    it.close()
+    assert not it._thread.is_alive()
+
+    # normal exhaustion still yields everything exactly once
+    it2 = prefetch(iter(range(7)), size=3)
+    assert list(it2) == list(range(7))
+
+
+def test_device_prefetch_places_batches():
+    import jax
+
+    from repro.data import device_prefetch
+
+    it = device_prefetch(iter([{"x": np.ones((2, 3), np.float32)}]), size=2)
+    batch = next(it)
+    assert isinstance(batch["x"], jax.Array)
+    np.testing.assert_array_equal(np.asarray(batch["x"]), np.ones((2, 3)))
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+def test_markov_documents_deterministic_and_bounded():
+    from repro.data import markov_documents
+
+    a = list(markov_documents(64, 2000, 3, 40, seed=0, stream_seed=1))
+    b = list(markov_documents(64, 2000, 3, 40, seed=0, stream_seed=1))
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    total = sum(d.size for d in a)
+    assert total >= 2000
+    # stored lengths are trained length + 1, inside [min_doc+1, max_doc+1]
+    assert all(4 <= d.size <= 41 for d in a)
+    assert max(int(d.max()) for d in a) < 64
+    with pytest.raises(ValueError, match="min_doc"):
+        next(markov_documents(64, 100, 0, 10))
+
+
 def test_markov_deterministic():
     a = next(iter(lm_batches(64, 4, 16, seed=0, stream_seed=1)))
     b = next(iter(lm_batches(64, 4, 16, seed=0, stream_seed=1)))

@@ -1,0 +1,325 @@
+"""Indexed memmap data path: cache round-trips, the pack-index/pack_sequences
+differential, pure-gather training batches (zero first-fit after build),
+mid-epoch resume identity through train/checkpoint.py, prefetch state
+tracking, and the repro.data.check validator failing loudly on corruption."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data import (
+    DataState,
+    IndexedPackedDataset,
+    TokenCache,
+    build_pack_index,
+    gather_rows,
+    markov_documents,
+    pack_sequences,
+    write_token_cache,
+)
+from repro.data.check import check_cache
+
+
+def _build(tmp_path, total=4000, min_doc=3, max_doc=70, vocab=64, stream_seed=1):
+    d = os.path.join(tmp_path, "cache")
+    write_token_cache(
+        markov_documents(vocab, total, min_doc, max_doc, seed=0, stream_seed=stream_seed),
+        d, vocab=vocab,
+    )
+    return d
+
+
+def _split_pairs(cache, order, seq_len):
+    """The pre-split (tokens, targets) chunk pairs the pack index packs —
+    what pack_sequences must see to reproduce the same layout."""
+    pairs = []
+    for d_id in order:
+        doc = cache.doc(int(d_id))
+        toks, tgts = doc[:-1], doc[1:]
+        for c in range(0, len(toks), seq_len):
+            pairs.append((toks[c : c + seq_len], tgts[c : c + seq_len]))
+    return pairs
+
+
+# ---------------------------------------------------------------------------
+# cache + shuffle basics
+# ---------------------------------------------------------------------------
+
+
+def test_cache_roundtrip_and_meta(tmp_path):
+    docs = [np.array([1, 2, 3]), np.array([4]), np.array([5, 6, 7, 8, 9])]
+    d = os.path.join(tmp_path, "c")
+    meta = write_token_cache(docs, d, vocab=16)
+    assert meta["n_docs"] == 3 and meta["n_tokens"] == 9
+    cache = TokenCache(d)
+    assert cache.n_docs == 3 and cache.n_tokens == 9
+    for i, doc in enumerate(docs):
+        np.testing.assert_array_equal(cache.doc(i), doc)
+    with pytest.raises(ValueError, match="outside"):
+        write_token_cache([np.array([99])], os.path.join(tmp_path, "bad"), vocab=16)
+    with pytest.raises(ValueError, match="empty"):
+        write_token_cache([np.array([], np.int32)], os.path.join(tmp_path, "bad2"))
+
+
+def test_epoch_shuffle_deterministic_keyed_by_seed_and_epoch(tmp_path):
+    d = _build(tmp_path, total=800)
+    a, b = TokenCache(d), TokenCache(d)
+    np.testing.assert_array_equal(a.epoch_order(7, 3), b.epoch_order(7, 3))
+    assert not np.array_equal(a.epoch_order(7, 3), a.epoch_order(7, 4))
+    assert not np.array_equal(a.epoch_order(7, 3), a.epoch_order(8, 3))
+    # a permutation, not a resample
+    assert sorted(a.epoch_order(7, 3)) == list(range(a.n_docs))
+
+
+# ---------------------------------------------------------------------------
+# satellite: pack index ≡ pack_sequences, byte for byte, hostile lengths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "lens, seq_len",
+    [
+        # hostile mix: 1-token trained docs (stored 2), skipped stored-1 docs,
+        # exact-row docs (stored seq+1), docs LONGER than a row (split), and
+        # a tail that forces ragged rows
+        ([2, 1, 33, 5, 97, 2, 64, 1, 130, 7, 3, 65, 33, 2], 32),
+        ([200, 2, 200, 3, 199], 64),  # mostly multi-row docs
+        ([2] * 40 + [9] * 7, 8),  # single-token segments everywhere
+        ([17, 16, 15, 18, 16, 2, 16], 16),  # boundary exactly at the row edge
+    ],
+)
+def test_pack_index_matches_pack_sequences(tmp_path, lens, seq_len):
+    rng = np.random.RandomState(0)
+    docs = [rng.randint(0, 64, size=n).astype(np.int32) for n in lens]
+    d = os.path.join(tmp_path, f"c{seq_len}")
+    write_token_cache(docs, d, vocab=64)
+    cache = TokenCache(d)
+    for seed, epoch in [(0, 0), (0, 1), (5, 2)]:
+        order = cache.epoch_order(seed, epoch)
+        pack = build_pack_index(cache.doc_lens, cache.doc_offsets, order, seq_len)
+        ref = pack_sequences(_split_pairs(cache, order, seq_len), seq_len)
+        got = gather_rows(pack, cache.tokens, 0, pack.n_rows)
+        assert ref["tokens"].shape == got["tokens"].shape
+        for key in ("tokens", "targets", "positions", "segments", "mask"):
+            assert ref[key].dtype == got[key].dtype, key
+            np.testing.assert_array_equal(ref[key], got[key], err_msg=key)
+
+
+def test_pack_index_matches_on_markov_stream(tmp_path):
+    d = _build(tmp_path, total=4000, min_doc=3, max_doc=70)
+    cache = TokenCache(d)
+    order = cache.epoch_order(0, 0)
+    pack = build_pack_index(cache.doc_lens, cache.doc_offsets, order, 32)
+    ref = pack_sequences(_split_pairs(cache, order, 32), 32)
+    got = gather_rows(pack, cache.tokens, 0, pack.n_rows)
+    for key in ref:
+        np.testing.assert_array_equal(ref[key], got[key], err_msg=key)
+    # arbitrary row windows agree with the full gather
+    full = got
+    for lo, hi in [(0, 4), (3, 11), (pack.n_rows - 2, pack.n_rows)]:
+        win = gather_rows(pack, cache.tokens, lo, hi)
+        for key in win:
+            np.testing.assert_array_equal(win[key], full[key][lo:hi], err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: training-time packing does ZERO first-fit work
+# ---------------------------------------------------------------------------
+
+
+def test_training_batches_never_invoke_the_packer(tmp_path, monkeypatch):
+    d = _build(tmp_path)
+    ds = IndexedPackedDataset(d, 32, 4, seed=0)
+    ds.pack_for(0)  # build the epoch index up front
+
+    import repro.data.pipeline as pipeline
+
+    def _no_find(self, n):
+        raise AssertionError("first-fit invoked after build")
+
+    def _no_pack(*a, **k):
+        raise AssertionError("pack_sequences invoked on the indexed path")
+
+    monkeypatch.setattr(pipeline._FirstFit, "find", _no_find)
+    monkeypatch.setattr(pipeline, "pack_sequences", _no_pack)
+    n_rows = ds.pack_for(0).n_rows
+    got = 0
+    while got + 4 <= n_rows:  # stay inside the prebuilt epoch
+        b = ds.next_batch()
+        got += 4
+        assert b["tokens"].shape == (4, 32)
+
+
+# ---------------------------------------------------------------------------
+# satellite: mid-epoch resume, element-wise identical, across epoch boundary
+# ---------------------------------------------------------------------------
+
+
+def test_mid_epoch_resume_is_element_wise_identical(tmp_path):
+    d = _build(tmp_path, total=1500)
+    rows = 4
+    ds = IndexedPackedDataset(d, 32, rows, seed=3)
+    n_rows = ds.pack_for(0).n_rows
+    # enough batches to cross at least one epoch boundary
+    n_batches = (2 * n_rows) // rows + 3
+    uninterrupted = [ds.next_batch() for _ in range(n_batches)]
+    assert int(ds.state.epoch) >= 2
+
+    cut = n_rows // rows // 2 + 1  # mid-epoch, not a boundary
+    ds1 = IndexedPackedDataset(d, 32, rows, seed=3)
+    for _ in range(cut):
+        ds1.next_batch()
+    st = ds1.state
+    assert int(st.row) not in (0, n_rows)  # genuinely mid-epoch
+    ds2 = IndexedPackedDataset(d, 32, rows, state=st)
+    for i in range(cut, n_batches):
+        b = ds2.next_batch()
+        for key in b:
+            np.testing.assert_array_equal(
+                b[key], uninterrupted[i][key], err_msg=f"batch {i} key {key}"
+            )
+
+
+def test_datastate_roundtrips_through_checkpoint(tmp_path):
+    from repro.train.checkpoint import restore, save
+
+    d = _build(tmp_path, total=600)
+    ds = IndexedPackedDataset(d, 32, 4, seed=9)
+    for _ in range(3):
+        ds.next_batch()
+    st = ds.state
+    path = os.path.join(tmp_path, "data.npz")
+    save(path, st)
+    back = restore(path, DataState.make())
+    assert (int(back.epoch), int(back.row), int(back.seed)) == (
+        int(st.epoch), int(st.row), int(st.seed),
+    )
+    # the restored state resumes the same stream
+    a = IndexedPackedDataset(d, 32, 4, state=st).next_batch()
+    b = IndexedPackedDataset(d, 32, 4, state=back).next_batch()
+    for key in a:
+        np.testing.assert_array_equal(a[key], b[key])
+
+
+def test_prefetched_iter_state_tracks_consumption(tmp_path):
+    d = _build(tmp_path, total=1200)
+    ds = IndexedPackedDataset(d, 32, 4, seed=1)
+    it = ds.iter_batches(prefetch_size=2)
+    ref = IndexedPackedDataset(d, 32, 4, seed=1)
+    try:
+        for i in range(5):
+            b = next(it)
+            r = ref.next_batch()
+            for key in b:
+                np.testing.assert_array_equal(b[key], r[key])
+            # .state is the post-THIS-batch cursor, not the producer's
+            st = it.state
+            assert (int(st.epoch), int(st.row)) == (
+                int(ref.state.epoch), int(ref.state.row),
+            )
+    finally:
+        it.close()
+    # resuming from the tracked state continues exactly
+    a = IndexedPackedDataset(d, 32, 4, state=it.state).next_batch()
+    b = ref.next_batch()
+    for key in a:
+        np.testing.assert_array_equal(a[key], b[key])
+
+
+# ---------------------------------------------------------------------------
+# epoch_batches (eval) + pack_efficiency bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_batches_finite_padded_and_isolated(tmp_path):
+    d = _build(tmp_path, total=900)
+    ds = IndexedPackedDataset(d, 32, 5, seed=0)
+    n_rows = ds.pack_for(0).n_rows
+    st_before = ds.state
+    batches = list(ds.epoch_batches())
+    assert len(batches) == -(-n_rows // 5)
+    assert all(b["tokens"].shape == (5, 32) for b in batches)
+    tail_pad_rows = len(batches) * 5 - n_rows
+    if tail_pad_rows:
+        tail = batches[-1]
+        assert (tail["positions"][-tail_pad_rows:] == -1).all()
+        assert (tail["mask"][-tail_pad_rows:] == 0).all()
+    # eval iteration does not move the training cursor
+    assert (int(ds.state.epoch), int(ds.state.row)) == (
+        int(st_before.epoch), int(st_before.row),
+    )
+    assert 0.0 < ds.epoch_stats[0] <= 1.0
+    assert ds.pack_for(0).pack_efficiency == ds.epoch_stats[0]
+
+
+def test_eval_loss_accepts_indexed_dataset(tmp_path):
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    from repro.train import eval_loss, make_loss_fn
+
+    cfg = get_smoke("granite-3-2b").replace(global_batch=4, seq_len=32)
+    d = _build(tmp_path, total=700, vocab=cfg.model.vocab_size)
+    ds = IndexedPackedDataset(d, 32, 4, seed=0)
+    params = init_params(cfg.model, jax.random.PRNGKey(0))
+    loss = eval_loss(cfg, make_loss_fn(cfg), params, ds)
+    assert np.isfinite(loss) and loss > 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: repro.data.check fails loudly on corruption/truncation
+# ---------------------------------------------------------------------------
+
+
+def test_check_cache_green_on_healthy_cache(tmp_path):
+    d = _build(tmp_path, total=900)
+    assert check_cache(d, seq_len=32, epochs=(0, 1)) == []
+
+
+def test_check_cache_flags_truncated_tokens(tmp_path):
+    d = _build(tmp_path, total=900)
+    bin_path = os.path.join(d, "tokens.bin")
+    with open(bin_path, "r+b") as f:
+        f.truncate(os.path.getsize(bin_path) - 8)
+    findings = check_cache(d)
+    assert findings and any("truncated" in f for f in findings)
+
+
+def test_check_cache_flags_corrupt_meta_and_lens(tmp_path):
+    d = _build(tmp_path, total=900)
+    meta_path = os.path.join(d, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    bad = dict(meta, dtype="float64")
+    with open(meta_path, "w") as f:
+        json.dump(bad, f)
+    assert any("dtype" in s for s in check_cache(d))
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    lens = np.load(os.path.join(d, "doc_lens.npy"))
+    lens[0] += 3  # sum no longer matches the stream
+    np.save(os.path.join(d, "doc_lens.npy"), lens)
+    assert any("sum" in s for s in check_cache(d))
+
+
+def test_check_cache_flags_out_of_vocab_tokens(tmp_path):
+    d = _build(tmp_path, total=900, vocab=64)
+    dtype = np.dtype(json.load(open(os.path.join(d, "meta.json")))["dtype"])
+    mm = np.memmap(os.path.join(d, "tokens.bin"), dtype=dtype, mode="r+")
+    mm[5] = 9999
+    mm.flush()
+    assert any("outside" in s for s in check_cache(d))
+
+
+def test_check_cli_exit_codes(tmp_path, capsys):
+    from repro.data.check import main
+
+    d = _build(tmp_path, total=900)
+    assert main([d, "--seq-len", "32"]) == 0
+    bin_path = os.path.join(d, "tokens.bin")
+    with open(bin_path, "r+b") as f:
+        f.truncate(16)
+    assert main([d]) == 1
+    assert "# DATA:" in capsys.readouterr().err
